@@ -1,0 +1,54 @@
+"""Paper Experiment 2 (second environment): hop latency, live vs store.
+
+The paper compares local-disk CMI cost against network+S3. Here: ``live``
+hop (direct device_put resharding — the paper's §Q5 streaming future work)
+vs ``store`` hop (checkpoint → shared store → svc/hop restore, Fig. 3/4).
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DHP, NBS
+from repro.utils import tree_nbytes
+
+MB = 1 << 20
+
+
+def run(n_mb: int = 64) -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    n = n_mb * MB // 4 // 256
+    state = {"x": jnp.asarray(rng.standard_normal((n, 256)), jnp.float32)}
+    nbytes = tree_nbytes(state)
+    root = tempfile.mkdtemp(prefix="bench-hop-")
+    rows = []
+    try:
+        nbs = NBS(root)
+        mesh = jax.make_mesh((1,), ("data",))
+        nbs.add_node("A", mesh=mesh)
+        nbs.add_node("B", mesh=mesh)
+        dhp = DHP(nbs, "A")
+        # live hop
+        t0 = time.perf_counter()
+        state = dhp.hop(state, "B", via="live")
+        jax.block_until_ready(state)
+        t_live = time.perf_counter() - t0
+        rows.append(("hop_live", t_live * 1e6, f"{nbytes/t_live/1e9:.2f}GB/s"))
+        # store hop (checkpoint + restore through the shared store)
+        t0 = time.perf_counter()
+        state = dhp.hop(state, "A", via="store")
+        jax.block_until_ready(state)
+        t_store = time.perf_counter() - t0
+        rows.append(
+            ("hop_store", t_store * 1e6,
+             f"{nbytes/t_store/1e9:.2f}GB/s store/live={t_store/max(t_live,1e-9):.1f}x")
+        )
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return rows

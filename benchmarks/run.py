@@ -1,0 +1,96 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Sections map to the paper's experiments (DESIGN.md §7):
+    bench_ckpt     — Exp 2: C/R overhead + CMI size (full/delta/device-hint/async)
+    bench_hop      — Exp 2: hop latency, live (streamed) vs store-mediated
+    bench_spot     — §2.2/Q1/Q2: spot-market cost model
+    bench_colocate — Exp 1: VIIRS→CrIS co-location stages + match kernel
+    bench_train    — end-to-end smoke train step + publish cadence overhead
+    roofline       — §Roofline table from the dry-run artifacts (if present)
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def _section(name: str, rows) -> None:
+    for n, us, derived in rows:
+        print(f"{name}.{n},{us:.1f},{derived}")
+
+
+def bench_train_rows(fast: bool) -> list[tuple[str, float, str]]:
+    """Train-step wall time + publish overhead on a smoke config (CPU)."""
+    import time
+
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core import DHP, NBS, JobStore
+    from repro.data import TokenPipeline
+    from repro.distributed.steps import batch_shardings, make_init_fn, make_train_step
+    from repro.optim import AdamWConfig
+    import tempfile
+
+    cfg = get_smoke_config("qwen3-1.7b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    oc = AdamWConfig()
+    init_fn, _ = make_init_fn(cfg, mesh, oc)
+    step_fn, st_sh, m_sh = make_train_step(cfg, mesh, oc, peak_lr=1e-3, warmup=1)
+    state = init_fn()
+    pipe = TokenPipeline(cfg, 64, 4)
+    batch, _ = pipe.batch_at(pipe.init_state())
+    bsh = batch_shardings(jax.tree_util.tree_map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch), mesh)
+    batch = jax.tree_util.tree_map(jax.device_put, batch, bsh)
+    jstep = jax.jit(step_fn, in_shardings=(st_sh, bsh), out_shardings=(st_sh, m_sh), donate_argnums=0)
+    state, m = jstep(state, batch)  # compile
+    jax.block_until_ready(m["loss"])
+    n = 3 if fast else 10
+    t0 = time.perf_counter()
+    for _ in range(n):
+        state, m = jstep(state, batch)
+    jax.block_until_ready(m["loss"])
+    dt = (time.perf_counter() - t0) / n
+    rows = [("train_step", dt * 1e6, f"smoke qwen3 seq64 b4 loss={float(m['loss']):.3f}")]
+    root = tempfile.mkdtemp(prefix="bench-train-")
+    store = JobStore(root)
+    nbs = NBS(root + "/nbs")
+    nbs.add_node("n0", mesh=mesh)
+    dhp = DHP(nbs, "n0", store)
+    job = store.create_job({})
+    t0 = time.perf_counter()
+    dhp.publish(job.job_id, "ckpt", state, step=1)
+    t_pub = time.perf_counter() - t0
+    rows.append(("publish_ckpt", t_pub * 1e6, f"{t_pub/dt:.1f} steps of overhead per publish"))
+    return rows
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    print("name,us_per_call,derived")
+    from benchmarks import bench_ckpt, bench_colocate, bench_hop, bench_spot
+
+    _section("ckpt", bench_ckpt.run(16 if fast else 64))
+    _section("hop", bench_hop.run(16 if fast else 64))
+    _section("spot", bench_spot.run())
+    _section("colocate", bench_colocate.run(2 if fast else 4))
+    _section("train", bench_train_rows(fast))
+    # roofline table (requires dry-run artifacts)
+    try:
+        from benchmarks import roofline
+
+        rows = [r for r in (roofline.roofline_row(c) for c in roofline.load_cells()) if r]
+        for r in rows:
+            print(
+                f"roofline.{r['arch']}.{r['shape']},0.0,"
+                f"dom={r['dominant']} frac={r['roofline_frac']:.3f} useful={r['useful_ratio']:.2f}"
+            )
+    except Exception as e:  # dry-run artifacts absent
+        print(f"roofline.skipped,0.0,{e}")
+
+
+if __name__ == "__main__":
+    main()

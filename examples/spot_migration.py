@@ -1,0 +1,32 @@
+"""Elastic spot migration: lose half the cluster mid-training, keep going.
+
+A training job starts on a 4×2 (data×model) mesh. At step 12 the spot market
+reclaims the instance; the replacement is SMALLER — a 2×2 mesh. The CMI's
+sharding records remap by axis name (divisibility-checked), so the same job
+resumes on the new topology without any user code.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/spot_migration.py
+"""
+
+import os
+import sys
+import tempfile
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+sys.path.insert(0, "src")
+
+import repro.launch.train as train  # noqa: E402
+
+store = tempfile.mkdtemp(prefix="navp-elastic-")
+loss = train.main([
+    "--arch", "granite-moe-1b-a400m", "--smoke",
+    "--steps", "24", "--publish-every", "6",
+    "--preempt-at", "12",
+    "--remesh", "4x2,2x2",  # incarnation 0: 8 chips; incarnation 1: 4 chips
+    "--store", store,
+    "--seq-len", "64", "--batch", "8",
+])
+print(f"\nfinal loss after elastic 8→4 chip migration: {loss:.4f}")

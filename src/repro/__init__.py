@@ -1,0 +1,11 @@
+"""NavP-JAX: Navigational Programming for science/ML data processing.
+
+Reproduction + scale-out of Pan & Jain, "NavP: Enabling Navigational
+Programming for Science Data Processing via Application-Initiated
+Checkpointing" (CS.DC 2021), rebuilt as a production JAX training/serving
+framework: the Checkpoint Memory Image (CMI) becomes a sharded state pytree,
+``hop(dest)`` becomes live resharding migration between device meshes, and
+``publish(status)`` becomes an atomic job-store commit.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,42 @@
+"""Checkpoint substrate: chunked, shard-deduped, atomically-committed CMIs.
+
+This is the storage layer under the NavP core (`repro.core`). It implements
+what the paper calls the Checkpoint Memory Image (CMI) — but, per the paper's
+own minimal-CMI principle, it stores *only application state* (arrays +
+scalars), never the runtime environment. Layout of one CMI directory::
+
+    <name>/
+      manifest.json   # structure skeleton + per-array chunk table + shardings
+      data-0.bin      # concatenated raw little-endian chunks
+      COMMIT          # written last inside the staging dir; the directory is
+                      # renamed into place only when fully consistent (Q4)
+
+Key properties (each tested):
+  * replica dedup — every distinct shard of a sharded ``jax.Array`` is written
+    exactly once, regardless of how many devices hold a copy;
+  * atomic commit — a crash at any point leaves either the old CMI or the new
+    CMI, never a torn one (paper §Q4);
+  * range-read restore — a restoring host materialising shard S reads only the
+    chunks overlapping S ("carry only the data needed", paper §1 opt. 1);
+  * delta references — a chunk entry may point into a *parent* CMI's data file,
+    enabling incremental CMIs (paper §Q3) without copying unchanged blocks.
+"""
+
+from repro.checkpoint.format import (  # noqa: F401
+    ArrayEntry,
+    ChunkEntry,
+    Manifest,
+    decode_structure,
+    encode_structure,
+)
+from repro.checkpoint.atomic import (  # noqa: F401
+    CommitScope,
+    is_committed,
+    list_committed,
+)
+from repro.checkpoint.serializer import (  # noqa: F401
+    SaveOptions,
+    load_checkpoint,
+    load_manifest,
+    save_checkpoint,
+)

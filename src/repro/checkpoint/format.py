@@ -1,0 +1,241 @@
+"""CMI manifest format: chunk tables, sharding records, structure skeletons.
+
+The manifest is plain JSON so that it is inspectable with standard tools and
+robust across Python/JAX versions (no pickling of live objects — the paper's
+"restart script" analogue is deterministic reconstruction from config, so the
+manifest only needs dtypes/shapes/slices, not code).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+try:  # bf16 et al. live in ml_dtypes (a jax dependency)
+    import ml_dtypes  # noqa: F401
+
+    _EXTRA_DTYPES = True
+except Exception:  # pragma: no cover
+    _EXTRA_DTYPES = False
+
+FORMAT_NAME = "navp-cmi"
+FORMAT_VERSION = 2
+
+
+def dtype_to_str(dt: Any) -> str:
+    return np.dtype(dt).name
+
+
+def dtype_from_str(name: str) -> np.dtype:
+    return np.dtype(name)  # ml_dtypes registers bfloat16/float8 with numpy
+
+
+# ---------------------------------------------------------------------------
+# chunk / array entries
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ChunkEntry:
+    """One contiguous serialized block covering ``slice`` of the full array.
+
+    ``ref`` is ``None`` for chunks in this CMI's own data file, or the name of
+    an ancestor CMI directory (sibling in the same store) for delta chunks
+    that were *not* rewritten because their content hash matched the parent.
+    """
+
+    slice: list[list[int]]  # [[start, stop], ...] per dim, full-array coords
+    file: str  # data file name within the owning CMI dir
+    offset: int
+    nbytes: int
+    crc32: int
+    hash: str  # blake2b-128 of raw bytes (delta compare key)
+    ref: str | None = None  # owning CMI dir name if not self
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        if d["ref"] is None:
+            del d["ref"]
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "ChunkEntry":
+        return ChunkEntry(
+            slice=[list(map(int, s)) for s in d["slice"]],
+            file=d["file"],
+            offset=int(d["offset"]),
+            nbytes=int(d["nbytes"]),
+            crc32=int(d["crc32"]),
+            hash=d["hash"],
+            ref=d.get("ref"),
+        )
+
+
+@dataclass
+class ShardingRecord:
+    """Serialized NamedSharding: enough to rebuild or *re-map* on a new mesh."""
+
+    mesh_shape: list[int]
+    mesh_axes: list[str]
+    pspec: list[Any]  # PartitionSpec entries: str | list[str] | None
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict | None) -> "ShardingRecord | None":
+        if d is None:
+            return None
+        return ShardingRecord(
+            mesh_shape=list(d["mesh_shape"]),
+            mesh_axes=list(d["mesh_axes"]),
+            pspec=list(d["pspec"]),
+        )
+
+
+@dataclass
+class ArrayEntry:
+    shape: list[int]
+    dtype: str
+    chunks: list[ChunkEntry]
+    sharding: ShardingRecord | None = None
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape)) * dtype_from_str(self.dtype).itemsize
+
+    def to_json(self) -> dict:
+        return {
+            "shape": self.shape,
+            "dtype": self.dtype,
+            "chunks": [c.to_json() for c in self.chunks],
+            "sharding": self.sharding.to_json() if self.sharding else None,
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "ArrayEntry":
+        return ArrayEntry(
+            shape=list(map(int, d["shape"])),
+            dtype=d["dtype"],
+            chunks=[ChunkEntry.from_json(c) for c in d["chunks"]],
+            sharding=ShardingRecord.from_json(d.get("sharding")),
+        )
+
+
+@dataclass
+class Manifest:
+    """Everything needed to restore a CMI — arrays, scalars, and structure."""
+
+    step: int
+    meta: dict[str, Any]
+    structure: Any  # JSON skeleton; array leaves are {"$array": path}
+    arrays: dict[str, ArrayEntry]
+    parent: str | None = None  # delta parent CMI name (for GC refcounting)
+    format: str = FORMAT_NAME
+    version: int = FORMAT_VERSION
+    extra: dict[str, Any] = field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return {
+            "format": self.format,
+            "version": self.version,
+            "step": self.step,
+            "meta": self.meta,
+            "parent": self.parent,
+            "structure": self.structure,
+            "arrays": {k: v.to_json() for k, v in self.arrays.items()},
+            "extra": self.extra,
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "Manifest":
+        if d.get("format") != FORMAT_NAME:
+            raise ValueError(f"not a {FORMAT_NAME} manifest: {d.get('format')!r}")
+        return Manifest(
+            step=int(d["step"]),
+            meta=d.get("meta", {}),
+            structure=d["structure"],
+            arrays={k: ArrayEntry.from_json(v) for k, v in d["arrays"].items()},
+            parent=d.get("parent"),
+            version=int(d.get("version", 1)),
+            extra=d.get("extra", {}),
+        )
+
+    def dumps(self) -> str:
+        return json.dumps(self.to_json(), sort_keys=True)
+
+    @staticmethod
+    def loads(s: str) -> "Manifest":
+        return Manifest.from_json(json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# structure skeleton: pytree <-> JSON (arrays referenced by path)
+# ---------------------------------------------------------------------------
+# Supported containers: dict (str keys), list, tuple. Leaves: arrays (handled
+# by caller via the `paths` set), python scalars (int/float/bool/str/None).
+# This deliberately excludes arbitrary objects — a CMI must be loadable by a
+# *fresh* process with no access to the original class definitions.
+
+
+def encode_structure(tree: Any, array_paths: set[str], prefix: str = "") -> Any:
+    def rec(node: Any, path: str) -> Any:
+        if isinstance(node, dict):
+            for k in node:
+                if not isinstance(k, str):
+                    raise TypeError(f"dict keys must be str, got {k!r} at {path!r}")
+            return {
+                "$kind": "dict",
+                "items": {
+                    k: rec(v, f"{path}/{k}" if path else k) for k, v in node.items()
+                },
+            }
+        if isinstance(node, tuple):
+            return {
+                "$kind": "tuple",
+                "items": [rec(v, f"{path}/{i}" if path else str(i)) for i, v in enumerate(node)],
+            }
+        if isinstance(node, list):
+            return {
+                "$kind": "list",
+                "items": [rec(v, f"{path}/{i}" if path else str(i)) for i, v in enumerate(node)],
+            }
+        key = path or "."  # root-leaf convention matches flatten_with_paths
+        if key in array_paths:
+            return {"$array": key}
+        if node is None or isinstance(node, (bool, int, float, str)):
+            return {"$scalar": node}
+        if isinstance(node, (np.integer,)):
+            return {"$scalar": int(node)}
+        if isinstance(node, (np.floating,)):
+            return {"$scalar": float(node)}
+        raise TypeError(
+            f"unsupported leaf type {type(node).__name__} at {path!r}; CMIs hold "
+            "only arrays, scalars, and dict/list/tuple containers"
+        )
+
+    return rec(tree, prefix)
+
+
+def decode_structure(skel: Any, arrays: dict[str, Any]) -> Any:
+    def rec(node: Any) -> Any:
+        if not isinstance(node, dict):
+            raise ValueError(f"malformed skeleton node: {node!r}")
+        if "$array" in node:
+            return arrays[node["$array"]]
+        if "$scalar" in node:
+            return node["$scalar"]
+        kind = node.get("$kind")
+        if kind == "dict":
+            return {k: rec(v) for k, v in node["items"].items()}
+        if kind == "tuple":
+            return tuple(rec(v) for v in node["items"])
+        if kind == "list":
+            return [rec(v) for v in node["items"]]
+        raise ValueError(f"malformed skeleton node: {node!r}")
+
+    return rec(skel)

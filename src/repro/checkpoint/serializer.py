@@ -1,0 +1,461 @@
+"""Chunked, shard-deduped CMI save/restore with delta references.
+
+Save path
+---------
+Each ``jax.Array`` leaf is decomposed into its *unique* addressable shards
+(replica dedup: a fully-replicated array on 512 devices is written once, not
+512 times — the paper's "do not move the same thing to a node twice"), each
+shard is split into ~``chunk_bytes`` row-blocks, and each block is hashed.
+When a ``parent`` CMI is given, blocks whose (path, slice, hash) match the
+parent are recorded as *references* into the parent's data file instead of
+being rewritten — this is the paper's §Q3 incremental checkpointing.
+
+Restore path
+------------
+``load_checkpoint`` rebuilds the pytree. If target shardings are provided
+(dict path→Sharding, or a callback), arrays are materialised with
+``jax.make_array_from_callback`` and each target shard reads **only the byte
+ranges of chunks overlapping that shard** — a CMI written on mesh A restores
+onto an arbitrary mesh B ("hop" between differently-shaped slices) without
+ever assembling the full array on one host unless B is unsharded.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Mapping
+
+import jax
+import numpy as np
+
+from repro.checkpoint.atomic import COMMIT_FILE, CommitScope, is_committed
+from repro.checkpoint.format import (
+    ArrayEntry,
+    ChunkEntry,
+    Manifest,
+    ShardingRecord,
+    decode_structure,
+    dtype_from_str,
+    dtype_to_str,
+    encode_structure,
+)
+from repro.utils import content_hash, crc32_of, flatten_with_paths, logger
+
+DATA_FILE = "data-0.bin"
+
+ShardingResolver = Callable[[str, tuple[int, ...], np.dtype, ShardingRecord | None], Any]
+
+
+@dataclass
+class SaveOptions:
+    chunk_bytes: int = 16 << 20
+    dedup_replicas: bool = True
+    parent: str | None = None  # name of parent CMI (sibling dir) for delta
+    # Optional precomputed per-chunk change bitmaps (from the on-device
+    # delta_encode kernel): {array_path: bool ndarray over axis-0 chunk grid}.
+    # Chunks marked unchanged are ref'd to the parent without hashing.
+    changed_hint: dict[str, np.ndarray] = field(default_factory=dict)
+    validate_crc: bool = True
+
+
+class HostShards:
+    """Host-side snapshot of a (possibly sharded) device array.
+
+    Produced by ``repro.core.cmi.snapshot_to_host`` so the device→host copy
+    (cheap, HBM-bandwidth bound) happens synchronously at the publish point,
+    while serialization + disk I/O run in a background thread — the paper's
+    §Q5 "stream CMIs / avoid the two-step write" adapted to the TPU runtime.
+    """
+
+    def __init__(
+        self,
+        shape: tuple[int, ...],
+        dtype: Any,
+        shards: list[tuple[tuple[tuple[int, int], ...], np.ndarray]],
+        record: "ShardingRecord | None",
+    ):
+        self.shape = tuple(shape)
+        self.dtype = np.dtype(dtype)
+        self.shards = shards
+        self.record = record
+
+
+def _is_array_leaf(x: Any) -> bool:
+    return isinstance(x, (np.ndarray, jax.Array, HostShards))
+
+
+def _norm_index(index: tuple, shape: tuple[int, ...]) -> tuple[tuple[int, int], ...]:
+    """Resolve a shard index (tuple of slices) to concrete (start, stop) pairs."""
+    out = []
+    for sl, dim in zip(index, shape):
+        start = 0 if sl.start is None else int(sl.start)
+        stop = dim if sl.stop is None else int(sl.stop)
+        if sl.step not in (None, 1):
+            raise ValueError("strided shards are not supported")
+        out.append((start, stop))
+    return tuple(out)
+
+
+def _unique_shards(x: Any) -> list[tuple[tuple[tuple[int, int], ...], np.ndarray]]:
+    """Return [(full-array slice, host data)] with replica dedup."""
+    if isinstance(x, HostShards):
+        return x.shards
+    shape = tuple(x.shape)
+    if isinstance(x, np.ndarray):
+        return [(tuple((0, d) for d in shape), _contig(x))]
+    if not x.is_fully_addressable:
+        raise ValueError("multi-host arrays need per-host save (not used here)")
+    seen: dict[tuple, np.ndarray] = {}
+    for shard in x.addressable_shards:
+        key = _norm_index(shard.index, shape)
+        if key not in seen:
+            seen[key] = _contig(np.asarray(shard.data))
+    return sorted(seen.items(), key=lambda kv: kv[0])
+
+
+def _contig(x: np.ndarray) -> np.ndarray:
+    # np.ascontiguousarray promotes 0-d to 1-d; keep the true rank.
+    return np.ascontiguousarray(x).reshape(x.shape)
+
+
+def _sharding_record(x: Any) -> ShardingRecord | None:
+    if isinstance(x, HostShards):
+        return x.record
+    if isinstance(x, jax.Array) and isinstance(x.sharding, jax.sharding.NamedSharding):
+        mesh = x.sharding.mesh
+        spec = []
+        for entry in x.sharding.spec:
+            if entry is None:
+                spec.append(None)
+            elif isinstance(entry, (tuple, list)):
+                spec.append(list(entry))
+            else:
+                spec.append(str(entry))
+        return ShardingRecord(
+            mesh_shape=list(mesh.devices.shape),
+            mesh_axes=list(mesh.axis_names),
+            pspec=spec,
+        )
+    return None
+
+
+class _ChunkWriter:
+    def __init__(self, path: Path):
+        self.f = open(path, "wb")
+        self.offset = 0
+
+    def append(self, buf: bytes) -> tuple[int, int]:
+        off = self.offset
+        self.f.write(buf)
+        self.offset += len(buf)
+        return off, len(buf)
+
+    def close(self) -> None:
+        self.f.flush()
+        os.fsync(self.f.fileno())
+        self.f.close()
+
+
+def _chunk_rows(shard_shape: tuple[int, ...], itemsize: int, chunk_bytes: int) -> int:
+    """Rows of the shard's axis 0 per chunk (whole shard if 0-d/1 row)."""
+    if not shard_shape:
+        return 1
+    row_bytes = itemsize * int(np.prod(shard_shape[1:], dtype=np.int64)) if len(shard_shape) > 1 else itemsize
+    return max(1, chunk_bytes // max(1, row_bytes))
+
+
+def save_checkpoint(
+    store_root: str | os.PathLike,
+    name: str,
+    tree: Any,
+    *,
+    step: int = 0,
+    meta: dict | None = None,
+    options: SaveOptions | None = None,
+    _crash_after_data: bool = False,
+) -> Manifest:
+    """Serialize ``tree`` as CMI ``<store_root>/<name>``. Returns the manifest."""
+    opts = options or SaveOptions()
+    store_root = Path(store_root)
+    store_root.mkdir(parents=True, exist_ok=True)
+    final = store_root / name
+
+    parent_chunks: dict[tuple[str, tuple], ChunkEntry] = {}
+    if opts.parent is not None:
+        pman = load_manifest(store_root, opts.parent)
+        for apath, aentry in pman.arrays.items():
+            for c in aentry.chunks:
+                key = (apath, tuple(tuple(s) for s in c.slice))
+                parent_chunks[key] = c
+
+    flat, _ = flatten_with_paths(tree)
+    array_paths = {k for k, v in flat.items() if _is_array_leaf(v)}
+    structure = encode_structure(tree, array_paths)
+
+    arrays: dict[str, ArrayEntry] = {}
+    stats = {"written_bytes": 0, "ref_bytes": 0, "chunks": 0, "ref_chunks": 0}
+
+    with CommitScope(final, crash_after_data=_crash_after_data) as scope:
+        writer = _ChunkWriter(scope.path(DATA_FILE))
+        try:
+            for apath in sorted(array_paths):
+                x = flat[apath]
+                dtype = np.dtype(x.dtype)
+                entry = ArrayEntry(
+                    shape=list(x.shape),
+                    dtype=dtype_to_str(dtype),
+                    chunks=[],
+                    sharding=_sharding_record(x),
+                )
+                hint = opts.changed_hint.get(apath)
+                chunk_counter = 0
+                for sl, data in _unique_shards(x):
+                    rows = _chunk_rows(data.shape, dtype.itemsize, opts.chunk_bytes)
+                    n0 = data.shape[0] if data.ndim else 1
+                    for r0 in range(0, n0, rows):
+                        r1 = min(n0, r0 + rows)
+                        if data.ndim:
+                            block = data[r0:r1]
+                            bslice = [[sl[0][0] + r0, sl[0][0] + r1]] + [
+                                [a, b] for a, b in sl[1:]
+                            ]
+                        else:
+                            block = data
+                            bslice = []
+                        key = (apath, tuple(tuple(s) for s in bslice))
+                        pchunk = parent_chunks.get(key)
+                        unchanged_hint = (
+                            hint is not None
+                            and chunk_counter < len(hint)
+                            and not bool(hint[chunk_counter])
+                            and pchunk is not None
+                        )
+                        if unchanged_hint:
+                            # Device-side bitmap says this block is identical;
+                            # skip the host hash entirely (paper §Q3/Q5).
+                            cent = ChunkEntry(
+                                slice=[list(s) for s in bslice],
+                                file=pchunk.file,
+                                offset=pchunk.offset,
+                                nbytes=pchunk.nbytes,
+                                crc32=pchunk.crc32,
+                                hash=pchunk.hash,
+                                ref=pchunk.ref or opts.parent,
+                            )
+                            stats["ref_bytes"] += cent.nbytes
+                            stats["ref_chunks"] += 1
+                        else:
+                            buf = block.tobytes()
+                            h = content_hash(buf)
+                            if pchunk is not None and pchunk.hash == h:
+                                cent = ChunkEntry(
+                                    slice=[list(s) for s in bslice],
+                                    file=pchunk.file,
+                                    offset=pchunk.offset,
+                                    nbytes=pchunk.nbytes,
+                                    crc32=pchunk.crc32,
+                                    hash=h,
+                                    ref=pchunk.ref or opts.parent,
+                                )
+                                stats["ref_bytes"] += cent.nbytes
+                                stats["ref_chunks"] += 1
+                            else:
+                                off, n = writer.append(buf)
+                                cent = ChunkEntry(
+                                    slice=[list(s) for s in bslice],
+                                    file=DATA_FILE,
+                                    offset=off,
+                                    nbytes=n,
+                                    crc32=crc32_of(buf),
+                                    hash=h,
+                                )
+                                stats["written_bytes"] += n
+                        stats["chunks"] += 1
+                        entry.chunks.append(cent)
+                        chunk_counter += 1
+                arrays[apath] = entry
+        finally:
+            writer.close()
+
+        manifest = Manifest(
+            step=step,
+            meta=meta or {},
+            structure=structure,
+            arrays=arrays,
+            parent=opts.parent,
+            extra={"stats": stats},
+        )
+        scope.write_text("manifest.json", manifest.dumps())
+    logger.debug(
+        "saved CMI %s: %d chunks (%d ref'd), %.1f MiB written, %.1f MiB ref'd",
+        name, stats["chunks"], stats["ref_chunks"],
+        stats["written_bytes"] / 2**20, stats["ref_bytes"] / 2**20,
+    )
+    return manifest
+
+
+# ---------------------------------------------------------------------------
+# restore
+# ---------------------------------------------------------------------------
+
+
+def load_manifest(store_root: str | os.PathLike, name: str) -> Manifest:
+    d = Path(store_root) / name
+    if not is_committed(d):
+        raise FileNotFoundError(f"CMI {d} is missing or uncommitted (no {COMMIT_FILE})")
+    return Manifest.loads((d / "manifest.json").read_text())
+
+
+def _overlap(
+    a: list[list[int]] | tuple, b: tuple[tuple[int, int], ...]
+) -> tuple[tuple[int, int], ...] | None:
+    out = []
+    for (a0, a1), (b0, b1) in zip(a, b):
+        lo, hi = max(a0, b0), min(a1, b1)
+        if lo >= hi:
+            return None
+        out.append((lo, hi))
+    return tuple(out)
+
+
+class _ChunkReader:
+    """Reads chunk byte ranges with file-handle caching + CRC validation."""
+
+    def __init__(self, store_root: Path, self_name: str, validate_crc: bool):
+        self.root = store_root
+        self.name = self_name
+        self.validate = validate_crc
+        self._files: dict[Path, Any] = {}
+
+    def read(self, chunk: ChunkEntry, dtype: np.dtype) -> np.ndarray:
+        owner = chunk.ref or self.name
+        p = self.root / owner / chunk.file
+        f = self._files.get(p)
+        if f is None:
+            f = self._files[p] = open(p, "rb")
+        f.seek(chunk.offset)
+        buf = f.read(chunk.nbytes)
+        if len(buf) != chunk.nbytes:
+            raise IOError(f"short read on {p} @ {chunk.offset}")
+        if self.validate and crc32_of(buf) != chunk.crc32:
+            raise IOError(f"CRC mismatch in {p} @ {chunk.offset} (corrupt CMI)")
+        shape = tuple(b - a for a, b in chunk.slice)
+        return np.frombuffer(buf, dtype=dtype).reshape(shape)
+
+    def close(self) -> None:
+        for f in self._files.values():
+            f.close()
+        self._files.clear()
+
+
+def _assemble(
+    entry: ArrayEntry,
+    target: tuple[tuple[int, int], ...],
+    reader: _ChunkReader,
+) -> np.ndarray:
+    """Materialise ``target`` slice of the array, reading only overlapping chunks."""
+    dtype = dtype_from_str(entry.dtype)
+    tshape = tuple(b - a for a, b in target)
+    out = np.empty(tshape, dtype=dtype)
+    filled = 0
+    for chunk in entry.chunks:
+        ov = _overlap(chunk.slice, target)
+        if ov is None:
+            continue
+        block = reader.read(chunk, dtype)
+        src = tuple(
+            slice(lo - c0, hi - c0) for (lo, hi), (c0, _) in zip(ov, chunk.slice)
+        )
+        dst = tuple(slice(lo - t0, hi - t0) for (lo, hi), (t0, _) in zip(ov, target))
+        out[dst] = block[src]
+        filled += int(np.prod([hi - lo for lo, hi in ov], dtype=np.int64)) if ov else 1
+    expected = int(np.prod(tshape, dtype=np.int64)) if tshape else 1
+    if filled != expected:
+        raise IOError(
+            f"CMI chunks cover {filled}/{expected} elements of requested slice "
+            "(inconsistent manifest)"
+        )
+    return out
+
+
+def load_checkpoint(
+    store_root: str | os.PathLike,
+    name: str,
+    *,
+    shardings: Mapping[str, Any] | ShardingResolver | None = None,
+    validate_crc: bool = True,
+) -> tuple[Any, Manifest]:
+    """Restore a CMI. Returns ``(tree, manifest)``.
+
+    ``shardings`` may be: None (restore numpy arrays); a mapping from array
+    path to ``jax.sharding.Sharding``; or a resolver callback
+    ``(path, shape, dtype, saved_sharding_record) -> Sharding | None``.
+    """
+    store_root = Path(store_root)
+    manifest = load_manifest(store_root, name)
+    reader = _ChunkReader(store_root, name, validate_crc)
+    try:
+        arrays: dict[str, Any] = {}
+        for apath, entry in manifest.arrays.items():
+            shape = tuple(entry.shape)
+            dtype = dtype_from_str(entry.dtype)
+            if callable(shardings):
+                sharding = shardings(apath, shape, dtype, entry.sharding)
+            elif shardings is not None:
+                sharding = shardings.get(apath)
+            else:
+                sharding = None
+            if sharding is None:
+                full = tuple((0, d) for d in shape)
+                arrays[apath] = _assemble(entry, full, reader)
+            else:
+                def cb(index, entry=entry):
+                    tgt = _norm_index(index, shape) if index else ()
+                    if not shape:  # 0-d
+                        return _assemble(entry, (), reader)
+                    return _assemble(entry, tgt, reader)
+
+                arrays[apath] = jax.make_array_from_callback(shape, sharding, cb)
+        tree = decode_structure(manifest.structure, arrays)
+        return tree, manifest
+    finally:
+        reader.close()
+
+
+def load_arrays(
+    store_root: str | os.PathLike,
+    name: str,
+    paths: list[str] | None = None,
+    *,
+    shardings: Mapping[str, Any] | ShardingResolver | None = None,
+    validate_crc: bool = True,
+) -> dict[str, Any]:
+    """Partial restore: just the named arrays as a flat {path: array} dict."""
+    store_root = Path(store_root)
+    manifest = load_manifest(store_root, name)
+    reader = _ChunkReader(store_root, name, validate_crc)
+    out: dict[str, Any] = {}
+    try:
+        for apath in paths if paths is not None else list(manifest.arrays):
+            entry = manifest.arrays[apath]
+            shape = tuple(entry.shape)
+            dtype = dtype_from_str(entry.dtype)
+            if callable(shardings):
+                sharding = shardings(apath, shape, dtype, entry.sharding)
+            elif shardings is not None:
+                sharding = shardings.get(apath)
+            else:
+                sharding = None
+            if sharding is None:
+                out[apath] = _assemble(entry, tuple((0, d) for d in shape), reader)
+            else:
+                def cb(index, entry=entry, shape=shape):
+                    tgt = _norm_index(index, shape) if index else ()
+                    return _assemble(entry, tgt if shape else (), reader)
+
+                out[apath] = jax.make_array_from_callback(shape, sharding, cb)
+        return out
+    finally:
+        reader.close()

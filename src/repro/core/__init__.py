@@ -1,0 +1,27 @@
+"""NavP core — the paper's primary contribution, adapted to JAX meshes.
+
+Modules:
+  cmi         Checkpoint Memory Image: state pytree snapshot/restore with
+              mesh-remapping sharding resolution (elastic restore).
+  jobstore    Job database with the paper's status machine (new/ckpt/finished)
+              and the three services: svc/list_jobs, svc/get_job,
+              svc/publish_job.
+  nbs         NavP Bridging Services: per-node service registry + svc/hop.
+  dhp         The DHP tool (DMTCP Hop & Publish analogue): hop(dest) and
+              publish(dest, status), Figures 3/4/6 of the paper.
+  delta       Incremental (delta) CMIs with on-device change detection (§Q3).
+  preemption  Spot-instance preemption notices + market simulator (§2.2, Q1).
+  itinerary   DSC itineraries: sequential programs hopping across meshes.
+  plugins     DMTCP-plugin-style event hooks (on_checkpoint/on_restart/on_hop).
+  colocation  The paper's VIIRS/CrIS co-location application, in JAX.
+"""
+
+from repro.core.cmi import (  # noqa: F401
+    mesh_resharding_resolver,
+    restore_cmi,
+    save_cmi,
+    snapshot_to_host,
+)
+from repro.core.jobstore import Job, JobStore  # noqa: F401
+from repro.core.nbs import NBS, Node  # noqa: F401
+from repro.core.dhp import DHP, Preempted  # noqa: F401

@@ -1,0 +1,241 @@
+"""DHP — the "DMTCP Hop and Publish" tool (paper §2.4, §3, Figures 3 & 6).
+
+Two utilities around checkpoint/restart:
+
+``hop(state, dest)``   (Fig. 3)
+    (1) checkpoint()                       -> save_cmi to the shared store
+    (2) copy CMI + restart script to S3    -> (same step; store IS the S3)
+    (3) request svc/hop on dest            -> nbs.call(dest, "svc/hop", ...)
+    (4) exit                               -> source drops its reference
+
+    A ``via="live"`` fast path implements the paper's §Q5 future work —
+    streaming the state directly to the destination mesh without the
+    intermediate disk write (``jax.device_put`` resharding = ICI/DCN
+    transfer on real hardware).
+
+``publish(job_id, status, ...)``  (Fig. 6)
+    status == "ckpt":     checkpoint, upload CMI, svc/publish_job("ckpt")
+    status == "finished": upload product,         svc/publish_job("finished")
+
+    Async mode snapshots device→host synchronously, then serializes and
+    publishes from a background thread so the step loop never waits on disk
+    (straggler mitigation for slow blobstores).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+import uuid
+from typing import Any
+
+import jax
+
+from repro.checkpoint.serializer import SaveOptions
+from repro.core.cmi import mesh_resharding_resolver, restore_cmi, save_cmi, snapshot_to_host
+from repro.core.delta import DeltaPolicy, DeltaTracker
+from repro.core.jobstore import STATUS_CKPT, STATUS_FINISHED, JobStore
+from repro.core.nbs import NBS
+from repro.utils import logger
+
+
+class Preempted(RuntimeError):
+    """Raised inside a worker when its instance is reclaimed mid-task."""
+
+
+class DHP:
+    def __init__(
+        self,
+        nbs: NBS,
+        node: str,
+        jobstore: JobStore | None = None,
+        *,
+        delta: DeltaPolicy | None = None,
+        async_publish: bool = False,
+        chunk_bytes: int = 16 << 20,
+    ):
+        self.nbs = nbs
+        self.node = node
+        self.jobstore = jobstore
+        self.delta = DeltaTracker(delta or DeltaPolicy())
+        self.async_publish = async_publish
+        self.chunk_bytes = chunk_bytes
+        self._worker: threading.Thread | None = None
+        self._q: queue.Queue = queue.Queue()
+        self._pending = 0
+        self._pending_lock = threading.Lock()
+        self._errors: list[Exception] = []
+
+    # ------------------------------------------------------------------
+    # hop (Fig. 3 + Fig. 4)
+    # ------------------------------------------------------------------
+    def hop(self, state: Any, dest: str, *, via: str = "auto", step: int = 0) -> Any:
+        """Migrate ``state`` to node ``dest``; returns the state living there."""
+        src = self.node
+        dest_node = self.nbs.node(dest)  # raises if dest was reclaimed
+        if via == "auto":
+            via = "live" if dest_node.mesh is not None else "store"
+        self.nbs.plugins.emit("on_hop", src=src, dest=dest, via=via, cmi=None)
+        if via == "live":
+            # §Q5: stream directly — reshard onto the destination mesh.
+            resolver = mesh_resharding_resolver(dest_node.mesh)
+            out = _reshard_tree(state, resolver)
+            self.node = dest
+            logger.info("hop(live) %s -> %s", src, dest)
+            return out
+        # store-mediated (Fig. 3): checkpoint -> S3 -> svc/hop(dest)
+        name = f"hop-{uuid.uuid4().hex[:12]}"
+        self.nbs.plugins.emit("on_checkpoint", node=src, cmi=name, step=step)
+        save_cmi(
+            self.nbs.hop_root,
+            name,
+            state,
+            step=step,
+            meta={"src": src, "dest": dest},
+            options=SaveOptions(chunk_bytes=self.chunk_bytes),
+        )
+        del state  # (4) "exit": the source's copy is gone
+        out = self.nbs.call(dest, "svc/hop", cmi=name)
+        self.node = dest
+        logger.info("hop(store) %s -> %s via %s", src, dest, name)
+        return out
+
+    # ------------------------------------------------------------------
+    # publish (Fig. 6)
+    # ------------------------------------------------------------------
+    def publish(
+        self,
+        job_id: str,
+        status: str,
+        state: Any = None,
+        *,
+        step: int = 0,
+        product: Any = None,
+        meta: dict | None = None,
+        changed_hint: dict | None = None,
+    ) -> str | None:
+        """Publish a checkpoint ("ckpt") or final product ("finished").
+
+        Returns the CMI/product name. In async mode the device→host snapshot
+        happens now; serialization + job-store update complete in background
+        (``flush()`` joins them).
+        """
+        if self.jobstore is None:
+            raise RuntimeError("publish requires a JobStore")
+        if status == STATUS_CKPT:
+            if state is None:
+                raise ValueError('publish(status="ckpt") needs state')
+            name = f"cmi-{step:010d}-{uuid.uuid4().hex[:8]}"
+            parent = self.delta.parent_for(job_id, self.jobstore)
+            opts = SaveOptions(
+                chunk_bytes=self.chunk_bytes,
+                parent=parent,
+                changed_hint=changed_hint or {},
+            )
+            self.nbs.plugins.emit("on_checkpoint", node=self.node, cmi=name, step=step)
+            if self.async_publish:
+                host_state = snapshot_to_host(state)
+                self._submit(self._do_publish_ckpt, job_id, name, host_state, step, meta, opts)
+            else:
+                self._do_publish_ckpt(job_id, name, state, step, meta, opts)
+            self.delta.record_published(job_id, name)
+            return name
+        if status == STATUS_FINISHED:
+            self.flush()  # never finish before earlier ckpts land
+            name = None
+            if product is not None:
+                name = f"product-{uuid.uuid4().hex[:8]}"
+                save_cmi(
+                    self.jobstore.cmi_root(job_id), name, product, step=step,
+                    meta={"kind": "product", **(meta or {})},
+                )
+            self.jobstore.svc_publish_job(job_id, STATUS_FINISHED, product=name, step=step)
+            self.nbs.plugins.emit("on_publish", job_id=job_id, status=status, name=name)
+            return name
+        raise ValueError(f"unknown publish status {status!r}")
+
+    def _do_publish_ckpt(self, job_id, name, state, step, meta, opts) -> None:
+        save_cmi(
+            self.jobstore.cmi_root(job_id), name, state, step=step,
+            meta={"node": self.node, **(meta or {})}, options=opts,
+        )
+        self.jobstore.svc_publish_job(
+            job_id, STATUS_CKPT, cmi=name, step=step,
+            keep_last=self.delta.policy.keep_last,
+        )
+        self.nbs.plugins.emit("on_publish", job_id=job_id, status=STATUS_CKPT, name=name)
+
+    # ------------------------------------------------------------------
+    # restart (Fig. 7 line 5)
+    # ------------------------------------------------------------------
+    def restart(self, job_id: str, *, node: str | None = None) -> tuple[Any, int]:
+        """Resume a "ckpt" job from its most recent published CMI."""
+        if self.jobstore is None:
+            raise RuntimeError("restart requires a JobStore")
+        node = node or self.node
+        job = self.jobstore.read_job(job_id)
+        if job.cmi is None:
+            raise ValueError(f"job {job_id} has no published CMI")
+        mesh = self.nbs.node(node).mesh
+        state, manifest = restore_cmi(self.jobstore.cmi_root(job_id), job.cmi, mesh=mesh)
+        self.nbs.plugins.emit("on_restart", node=node, cmi=job.cmi, step=manifest.step)
+        self.delta.record_published(job_id, job.cmi)  # future deltas chain here
+        return state, manifest.step
+
+    # ------------------------------------------------------------------
+    # async machinery
+    # ------------------------------------------------------------------
+    def _submit(self, fn, *args) -> None:
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+        with self._pending_lock:
+            self._pending += 1
+        self._q.put((fn, args))
+
+    def _drain(self) -> None:
+        while True:
+            try:
+                fn, args = self._q.get(timeout=0.25)
+            except queue.Empty:
+                return
+            try:
+                fn(*args)
+            except Exception as e:  # surfaced at flush()
+                self._errors.append(e)
+                logger.exception("async publish failed")
+            finally:
+                with self._pending_lock:
+                    self._pending -= 1
+
+    def flush(self, timeout: float = 300.0) -> None:
+        """Join all in-flight async publishes; re-raise the first failure."""
+        deadline = time.time() + timeout
+        while True:
+            with self._pending_lock:
+                if self._pending == 0:
+                    break
+            if time.time() > deadline:
+                raise TimeoutError("async publish did not drain")
+            time.sleep(0.005)
+        if self._errors:
+            raise self._errors.pop(0)
+
+
+def _reshard_tree(state: Any, resolver) -> Any:
+    """device_put each array leaf per the resolver (live migration)."""
+    from repro.checkpoint.serializer import _sharding_record
+
+    def put(path_leaf):
+        path, leaf = path_leaf
+        if isinstance(leaf, jax.Array):
+            sh = resolver(path, tuple(leaf.shape), leaf.dtype, _sharding_record(leaf))
+            return jax.device_put(leaf, sh)
+        return leaf
+
+    from repro.utils import flatten_with_paths, unflatten_from_paths
+
+    flat, treedef = flatten_with_paths(state)
+    out = {k: put((k, v)) for k, v in flat.items()}
+    return unflatten_from_paths(treedef, out)

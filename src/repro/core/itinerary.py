@@ -1,0 +1,95 @@
+"""DSC itineraries and the Mobile Pipeline (paper §1.5, refs [6][7]).
+
+An *itinerary* is the Lagrangian program the paper advocates: a sequential
+list of stages, each annotated with the node where it should execute. The
+runner hops the live state between nodes and optionally publishes a CMI
+after stages the application marks worthwhile — Figure 8's
+
+    hop(other); read; hop(other); compute; hop(other); write
+
+A :class:`MobilePipeline` runs several itineraries over a stream of work
+items in software-pipelined order (ref [7]): item *i* executes stage *s* at
+logical tick ``i + s``, so at steady state every node is busy with a
+different item — the NavP rendering of pipeline parallelism. (The in-mesh,
+microbatched version for model layers lives in ``repro.distributed.pipeline``.)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.core.dhp import DHP
+from repro.core.jobstore import STATUS_CKPT
+from repro.utils import logger
+
+
+@dataclass
+class Stage:
+    dest: str  # node name to hop to before running
+    fn: Callable[[Any], Any]  # state -> state
+    name: str = ""
+    publish: bool = False  # publish a "ckpt" CMI after this stage (Fig. 7)
+
+
+class Itinerary:
+    def __init__(self, dhp: DHP, job_id: str | None = None):
+        self.dhp = dhp
+        self.job_id = job_id
+        self.trace: list[tuple[str, str]] = []  # (stage, node) execution log
+
+    def run(self, state: Any, stages: list[Stage], *, start_stage: int = 0, step0: int = 0) -> Any:
+        """Execute stages sequentially, hopping between nodes."""
+        for i in range(start_stage, len(stages)):
+            st = stages[i]
+            if self.dhp.node != st.dest:
+                state = self.dhp.hop(state, st.dest, step=step0 + i)
+            state = st.fn(state)
+            self.trace.append((st.name or f"stage{i}", self.dhp.node))
+            if st.publish and self.job_id is not None:
+                # record which stage completed so restart skips finished work
+                pub_state = dict(state) if isinstance(state, dict) else {"state": state}
+                pub_state = {**pub_state, "itinerary_stage": i + 1}
+                self.dhp.publish(self.job_id, STATUS_CKPT, pub_state, step=step0 + i)
+        return state
+
+    def resume(self, stages: list[Stage]) -> Any:
+        """Restart an interrupted itinerary from its last published stage."""
+        state, _ = self.dhp.restart(self.job_id)
+        start = int(state.pop("itinerary_stage", 0)) if isinstance(state, dict) else 0
+        logger.info("itinerary resume at stage %d/%d", start, len(stages))
+        return self.run(state, stages, start_stage=start)
+
+
+@dataclass
+class MobilePipeline:
+    """Software-pipelined execution of one itinerary over many work items."""
+
+    dhp: DHP
+    stages: list[Stage]
+    tick_log: list[list[tuple[int, str]]] = field(default_factory=list)
+
+    def run(self, items: list[Any]) -> list[Any]:
+        n, s = len(items), len(self.stages)
+        states: dict[int, Any] = {}
+        done: dict[int, Any] = {}
+        for tick in range(n + s - 1):
+            active = []
+            # reverse stage order so item i's stage s runs before item i+1's s
+            for stage_idx in reversed(range(s)):
+                item_idx = tick - stage_idx
+                if 0 <= item_idx < n:
+                    st = self.stages[stage_idx]
+                    cur = states.pop(item_idx, None)
+                    if cur is None:
+                        cur = items[item_idx]
+                    if self.dhp.node != st.dest:
+                        cur = self.dhp.hop(cur, st.dest, step=tick)
+                    cur = st.fn(cur)
+                    active.append((item_idx, st.name or f"stage{stage_idx}"))
+                    if stage_idx == s - 1:
+                        done[item_idx] = cur
+                    else:
+                        states[item_idx] = cur
+            self.tick_log.append(active)
+        return [done[i] for i in range(n)]

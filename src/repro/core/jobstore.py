@@ -1,0 +1,254 @@
+"""Job store: the paper's SDS job database and its three services.
+
+Jobs carry exactly the paper's statuses (§3.3)::
+
+    "new"      — has input datasets, never ran
+    "ckpt"     — interrupted/staged; latest CMI is a *special product*
+    "finished" — final product published
+
+plus a lease field so multiple workers (Cloud instances) can pull jobs
+concurrently without double-claiming — the paper brackets this as the
+"running" status it omits for brevity; at 1000-node scale it is mandatory.
+
+Service API (in-process callables with service-shaped signatures; production
+would put these behind RPC — see DESIGN.md §2):
+
+    svc_list_jobs()                      -> [[job_id, status], ...]   (Fig. 5)
+    svc_get_job(job_id=None, lease_s=..) -> Job | None                 (§3.3-2)
+    svc_publish_job(job_id, status, ...)                               (§3.3-3)
+
+Storage is a directory tree with atomic JSON writes (tmp + rename) and
+``fcntl`` advisory locks, so the store itself survives preemption mid-update.
+"""
+
+from __future__ import annotations
+
+import fcntl
+import json
+import os
+import shutil
+import time
+import uuid
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+from typing import Any
+
+from repro.checkpoint.atomic import gc_orphans, is_committed
+from repro.checkpoint.serializer import load_manifest
+from repro.utils import logger
+
+STATUS_NEW = "new"
+STATUS_CKPT = "ckpt"
+STATUS_FINISHED = "finished"
+VALID_STATUS = (STATUS_NEW, STATUS_CKPT, STATUS_FINISHED)
+
+
+@dataclass
+class Job:
+    job_id: str
+    status: str = STATUS_NEW
+    input: dict[str, Any] = field(default_factory=dict)  # arch/shape/steps/...
+    cmi: str | None = None  # latest published CMI dir name (relative to job dir)
+    step: int = 0
+    product: str | None = None  # product dir/file name once finished
+    lease_owner: str | None = None
+    lease_expiry: float = 0.0
+    history: list[dict] = field(default_factory=list)
+
+    def to_json(self) -> dict:
+        return asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "Job":
+        return Job(**d)
+
+    def leased(self, now: float | None = None) -> bool:
+        return self.lease_owner is not None and (now or time.time()) < self.lease_expiry
+
+
+class _Locked:
+    def __init__(self, path: Path):
+        self.path = path
+
+    def __enter__(self):
+        self.fd = os.open(self.path, os.O_CREAT | os.O_RDWR)
+        fcntl.flock(self.fd, fcntl.LOCK_EX)
+        return self
+
+    def __exit__(self, *exc):
+        fcntl.flock(self.fd, fcntl.LOCK_UN)
+        os.close(self.fd)
+        return False
+
+
+def _atomic_write_json(path: Path, obj: Any) -> None:
+    tmp = path.with_suffix(f".tmp-{os.getpid()}-{uuid.uuid4().hex[:8]}")
+    tmp.write_text(json.dumps(obj, sort_keys=True))
+    os.replace(tmp, path)
+
+
+class JobStore:
+    """Filesystem-backed job database (the S3-bucket + scheduler analogue)."""
+
+    def __init__(self, root: str | os.PathLike):
+        self.root = Path(root)
+        (self.root / "jobs").mkdir(parents=True, exist_ok=True)
+
+    # -- paths ------------------------------------------------------------
+    def job_dir(self, job_id: str) -> Path:
+        return self.root / "jobs" / str(job_id)
+
+    def cmi_root(self, job_id: str) -> Path:
+        return self.job_dir(job_id)
+
+    def _job_file(self, job_id: str) -> Path:
+        return self.job_dir(job_id) / "job.json"
+
+    def _lock(self, job_id: str) -> _Locked:
+        return _Locked(self.job_dir(job_id) / ".lock")
+
+    # -- CRUD -------------------------------------------------------------
+    def create_job(self, input: dict[str, Any], job_id: str | None = None) -> Job:
+        job_id = str(job_id if job_id is not None else self._next_id())
+        jd = self.job_dir(job_id)
+        jd.mkdir(parents=True, exist_ok=True)
+        job = Job(job_id=job_id, input=input)
+        with self._lock(job_id):
+            if self._job_file(job_id).exists():
+                raise FileExistsError(f"job {job_id} exists")
+            _atomic_write_json(self._job_file(job_id), job.to_json())
+        return job
+
+    def _next_id(self) -> int:
+        with _Locked(self.root / ".ids.lock"):
+            ids = [int(p.name) for p in (self.root / "jobs").iterdir() if p.name.isdigit()]
+            return (max(ids) + 1) if ids else 1
+
+    def read_job(self, job_id: str) -> Job:
+        return Job.from_json(json.loads(self._job_file(job_id).read_text()))
+
+    def _update(self, job: Job, event: str) -> None:
+        job.history.append({"t": time.time(), "event": event, "step": job.step})
+        _atomic_write_json(self._job_file(job.job_id), job.to_json())
+
+    # -- the paper's three services ----------------------------------------
+    def svc_list_jobs(self) -> list[list[str]]:
+        """Figure 5: ``[["1","new"], ["2","ckpt"], ["3","finished"]]``."""
+        out = []
+        for p in sorted(
+            (self.root / "jobs").iterdir(),
+            key=lambda p: (not p.name.isdigit(), int(p.name) if p.name.isdigit() else 0, p.name),
+        ):
+            if (p / "job.json").exists():
+                j = self.read_job(p.name)
+                out.append([j.job_id, j.status])
+        return out
+
+    def svc_get_job(
+        self,
+        job_id: str | None = None,
+        *,
+        worker: str = "worker-0",
+        lease_s: float = 3600.0,
+    ) -> Job | None:
+        """Return the requested job, or claim the next not-finished job."""
+        if job_id is not None:
+            with self._lock(job_id):
+                job = self.read_job(job_id)
+                job.lease_owner, job.lease_expiry = worker, time.time() + lease_s
+                self._update(job, f"leased:{worker}")
+            return job
+        for jid, status in self.svc_list_jobs():
+            if status == STATUS_FINISHED:
+                continue
+            with self._lock(jid):
+                job = self.read_job(jid)  # re-read under lock
+                if job.status == STATUS_FINISHED or job.leased():
+                    continue
+                job.lease_owner, job.lease_expiry = worker, time.time() + lease_s
+                self._update(job, f"leased:{worker}")
+                return job
+        return None
+
+    def svc_publish_job(
+        self,
+        job_id: str,
+        status: str,
+        *,
+        cmi: str | None = None,
+        step: int | None = None,
+        product: str | None = None,
+        keep_last: int = 2,
+    ) -> Job:
+        """§3.3(3): publish a "ckpt" (CMI = special product) or "finished" job."""
+        if status not in (STATUS_CKPT, STATUS_FINISHED):
+            raise ValueError(f"publishable statuses are ckpt/finished, got {status!r}")
+        with self._lock(job_id):
+            job = self.read_job(job_id)
+            if job.status == STATUS_FINISHED:
+                raise ValueError(f"job {job_id} already finished")
+            if status == STATUS_CKPT:
+                if cmi is None or not is_committed(self.cmi_root(job_id) / cmi):
+                    raise ValueError(f"publish(ckpt) requires a committed CMI, got {cmi!r}")
+                job.cmi = cmi
+                if step is not None:
+                    job.step = step
+                job.status = STATUS_CKPT
+                self._update(job, f"publish:ckpt:{cmi}")
+            else:
+                job.product = product
+                job.status = STATUS_FINISHED
+                job.lease_owner = None
+                self._update(job, f"publish:finished:{product}")
+        if status == STATUS_CKPT:
+            self.gc_cmis(job_id, keep_last=keep_last)
+        return job
+
+    def release(self, job_id: str, *, to_status: str | None = None) -> Job:
+        with self._lock(job_id):
+            job = self.read_job(job_id)
+            job.lease_owner, job.lease_expiry = None, 0.0
+            if to_status is not None:
+                job.status = to_status  # interrupted jobs with no CMI → "new" (§3.3)
+            self._update(job, "released")
+        return job
+
+    # -- CMI lifecycle ------------------------------------------------------
+    def list_cmis(self, job_id: str) -> list[str]:
+        jd = self.job_dir(job_id)
+        return sorted(
+            p.name for p in jd.iterdir() if p.name.startswith("cmi-") and is_committed(p)
+        )
+
+    def gc_cmis(self, job_id: str, keep_last: int = 2) -> list[str]:
+        """Drop old CMIs, retaining delta-chain ancestors of anything kept.
+
+        The paper replaces the last CMI with the latest; with delta chains we
+        must keep every ancestor a kept CMI's chunks reference. ``parent``
+        links in manifests make the closure computable without reading data.
+        """
+        cmis = self.list_cmis(job_id)
+        keep = set(cmis[-keep_last:]) if keep_last > 0 else set()
+        job = self.read_job(job_id)
+        if job.cmi:
+            keep.add(job.cmi)
+        # close over delta parents
+        frontier = list(keep)
+        while frontier:
+            name = frontier.pop()
+            try:
+                man = load_manifest(self.cmi_root(job_id), name)
+            except FileNotFoundError:
+                continue
+            if man.parent and man.parent not in keep:
+                keep.add(man.parent)
+                frontier.append(man.parent)
+        removed = []
+        for name in cmis:
+            if name not in keep:
+                shutil.rmtree(self.job_dir(job_id) / name, ignore_errors=True)
+                removed.append(name)
+        gc_orphans(self.job_dir(job_id))
+        if removed:
+            logger.debug("gc job %s: removed %s", job_id, removed)
+        return removed

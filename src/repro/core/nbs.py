@@ -1,0 +1,105 @@
+"""NBS — NavP Bridging Services (paper §3).
+
+One NBS instance models a cluster: a set of *nodes* (Cloud instances / pod
+slices), each with its own device mesh and a service registry, plus a shared
+store (the S3 / shared-volume analogue). ``svc/hop`` on a node restores a CMI
+onto *that node's* mesh and hands back the live state — Figure 4's
+
+    (1) copy CMI and restart script from S3
+    (2) run dmtcp_restart_script.sh
+
+where step (2) is deterministic reconstruction: re-binding the state pytree
+to the destination mesh (the "restart script" is the model/step config, which
+both nodes already have — exactly like identical Singularity containers in
+the paper).
+
+Everything is in-process but service-shaped: handlers take/return plain data
+so fronting them with RPC is mechanical.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable
+
+from jax.sharding import Mesh
+
+from repro.core.cmi import restore_cmi
+from repro.core.plugins import PluginBus
+from repro.utils import logger
+
+HOP_NAMESPACE = "hops"
+
+
+@dataclass
+class Node:
+    """A compute node: named mesh + services (a Cloud instance analogue)."""
+
+    name: str
+    mesh: Mesh | None = None
+    services: dict[str, Callable] = field(default_factory=dict)
+    meta: dict[str, Any] = field(default_factory=dict)
+
+    def register(self, svc_name: str, handler: Callable) -> None:
+        self.services[svc_name] = handler
+
+
+class NBS:
+    """Service fabric: nodes + shared store + plugin event bus."""
+
+    def __init__(self, store_root: str | os.PathLike):
+        self.store_root = Path(store_root)
+        (self.store_root / HOP_NAMESPACE).mkdir(parents=True, exist_ok=True)
+        self.nodes: dict[str, Node] = {}
+        self.plugins = PluginBus()
+
+    # -- topology ----------------------------------------------------------
+    def add_node(self, name: str, mesh: Mesh | None = None, **meta) -> Node:
+        if name in self.nodes:
+            raise ValueError(f"node {name!r} already registered")
+        node = Node(name=name, mesh=mesh, meta=meta)
+        self._install_default_services(node)
+        self.nodes[name] = node
+        return node
+
+    def remove_node(self, name: str) -> None:
+        """A spot reclaim: the node vanishes; in-flight work must re-hop."""
+        self.nodes.pop(name, None)
+        logger.info("node %s reclaimed", name)
+
+    def node(self, name: str) -> Node:
+        try:
+            return self.nodes[name]
+        except KeyError:
+            raise KeyError(f"no such node {name!r} (reclaimed?)") from None
+
+    # -- service call ------------------------------------------------------
+    def call(self, node_name: str, svc_name: str, /, **kwargs) -> Any:
+        node = self.node(node_name)
+        try:
+            handler = node.services[svc_name]
+        except KeyError:
+            raise KeyError(f"node {node_name!r} has no service {svc_name!r}") from None
+        return handler(**kwargs)
+
+    # -- default services ----------------------------------------------------
+    def _install_default_services(self, node: Node) -> None:
+        def svc_ping() -> dict:
+            return {"node": node.name, "mesh": None if node.mesh is None else list(node.mesh.devices.shape)}
+
+        def svc_hop(cmi: str, store_root: str | None = None) -> Any:
+            """Figure 4: restore the named CMI onto this node's mesh."""
+            root = Path(store_root) if store_root else self.store_root / HOP_NAMESPACE
+            state, manifest = restore_cmi(root, cmi, mesh=node.mesh)
+            self.plugins.emit("on_restart", node=node.name, cmi=cmi, step=manifest.step)
+            logger.info("svc/hop: restored %s on node %s (step %d)", cmi, node.name, manifest.step)
+            return state
+
+        node.register("svc/ping", svc_ping)
+        node.register("svc/hop", svc_hop)
+
+    @property
+    def hop_root(self) -> Path:
+        return self.store_root / HOP_NAMESPACE

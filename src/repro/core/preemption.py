@@ -1,0 +1,181 @@
+"""Spot-instance preemption: notices, schedules, and the market simulator.
+
+Paper context (§2.2, §5 Q1): EC2 spot instances are ~90% cheaper but give a
+2-minute termination notice — too short to checkpoint a large job from
+scratch, which is exactly why the paper publishes CMIs *proactively* at
+application-chosen points and treats the notice as "finish the current step,
+publish, exit".
+
+Pieces:
+  * :class:`PreemptionNotice` — thread-safe notice flag with a deadline.
+    Installable on SIGTERM (the real notice path) or driven programmatically
+    (tests / simulator).
+  * :class:`SpotSchedule` — deterministic or hazard-rate preemption event
+    source, seedable for reproducible end-to-end kill/resume tests.
+  * :func:`run_preemptible` — supervision loop: run a worker, catch
+    :class:`~repro.core.dhp.Preempted`, provision a "new instance" (possibly
+    a different mesh shape — elastic), resume from the job store.
+  * :class:`SpotMarket` — price model used by the cost benchmark.
+"""
+
+from __future__ import annotations
+
+import signal
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.dhp import Preempted
+from repro.utils import logger
+
+
+class PreemptionNotice:
+    """The 2-minute-warning flag a worker polls between steps."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._deadline: float | None = None
+
+    def notify(self, grace_s: float = 120.0) -> None:
+        with self._lock:
+            self._deadline = time.time() + grace_s
+        logger.warning("preemption notice: %.0fs grace", grace_s)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._deadline = None
+
+    def imminent(self) -> bool:
+        with self._lock:
+            return self._deadline is not None
+
+    def time_left(self) -> float:
+        with self._lock:
+            return float("inf") if self._deadline is None else max(0.0, self._deadline - time.time())
+
+    def install_sigterm(self, grace_s: float = 120.0) -> None:
+        signal.signal(signal.SIGTERM, lambda *_: self.notify(grace_s))
+
+
+@dataclass
+class SpotSchedule:
+    """Preemption events, by step (deterministic) or hazard rate (random)."""
+
+    preempt_steps: tuple[int, ...] = ()  # deterministic: preempt before these steps
+    hazard_per_step: float = 0.0  # P(reclaim) each step
+    seed: int = 0
+    max_preemptions: int = 1_000_000
+    _rng: np.random.Generator = field(init=False, repr=False)
+    _count: int = field(default=0, init=False)
+
+    def __post_init__(self) -> None:
+        self._rng = np.random.default_rng(self.seed)
+
+    def should_preempt(self, step: int) -> bool:
+        if self._count >= self.max_preemptions:
+            return False
+        hit = step in self.preempt_steps or (
+            self.hazard_per_step > 0 and self._rng.random() < self.hazard_per_step
+        )
+        if hit:
+            self._count += 1
+        return hit
+
+
+def run_preemptible(
+    make_worker: Callable[[int], Callable[[], Any]],
+    *,
+    max_restarts: int = 16,
+) -> tuple[Any, int]:
+    """Supervision loop: ``make_worker(incarnation)() -> result``.
+
+    The worker raises :class:`Preempted` when its instance is reclaimed; the
+    supervisor provisions the next incarnation (the factory may hand back a
+    worker bound to a *different* mesh — elastic restart). Returns
+    ``(result, incarnations_used)``.
+    """
+    for incarnation in range(max_restarts + 1):
+        worker = make_worker(incarnation)
+        try:
+            return worker(), incarnation + 1
+        except Preempted as e:
+            logger.info("incarnation %d preempted (%s); restarting", incarnation, e)
+    raise RuntimeError(f"exceeded {max_restarts} restarts")
+
+
+@dataclass
+class SpotMarket:
+    """Price model for the cost benchmark (paper §2.2: ~90% discount)."""
+
+    on_demand_per_hour: float = 3.0  # m4.4xlarge-ish
+    spot_discount: float = 0.9
+    mean_uptime_hours: float = 6.0  # exponential reclaim model
+    seed: int = 0
+
+    @property
+    def spot_per_hour(self) -> float:
+        return self.on_demand_per_hour * (1.0 - self.spot_discount)
+
+    def sample_uptimes(self, n: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        return rng.exponential(self.mean_uptime_hours, size=n)
+
+    def cost_to_finish(
+        self,
+        work_hours: float,
+        *,
+        publish_period_hours: float,
+        publish_overhead_hours: float,
+        restart_overhead_hours: float = 0.05,
+        use_checkpoints: bool = True,
+        trials: int = 512,
+    ) -> dict[str, float]:
+        """Monte-Carlo cost/makespan of finishing ``work_hours`` on spot.
+
+        Without checkpoints an interrupted *atomic* job restarts from zero
+        (the paper's problem 1); with application-initiated publishes only
+        work since the last publish is lost.
+        """
+        rng = np.random.default_rng(self.seed + 1)
+        costs, spans = [], []
+        for _ in range(trials):
+            done = 0.0
+            paid = 0.0
+            span = 0.0
+            while done < work_hours:
+                up = rng.exponential(self.mean_uptime_hours)
+                if use_checkpoints:
+                    # progress advances in publish_period quanta + overhead
+                    usable = up
+                    prog = 0.0
+                    while usable > 0 and done + prog < work_hours:
+                        need = min(publish_period_hours, work_hours - done - prog)
+                        cost_step = need + publish_overhead_hours
+                        if usable >= cost_step:
+                            usable -= cost_step
+                            prog += need
+                        else:
+                            break  # partial period lost
+                    ran = up - max(0.0, usable)
+                    done += prog
+                else:
+                    ran = min(up, work_hours + 0.0)
+                    if up >= work_hours - done:
+                        ran = work_hours - done
+                        done = work_hours
+                    # else: atomic job lost entirely, done stays
+                paid += ran * self.spot_per_hour
+                span += ran + restart_overhead_hours
+            costs.append(paid)
+            spans.append(span)
+        on_demand_cost = work_hours * self.on_demand_per_hour
+        return {
+            "spot_cost": float(np.mean(costs)),
+            "spot_cost_p90": float(np.percentile(costs, 90)),
+            "makespan_hours": float(np.mean(spans)),
+            "on_demand_cost": on_demand_cost,
+            "savings_frac": float(1.0 - np.mean(costs) / on_demand_cost),
+        }

@@ -1,0 +1,55 @@
+"""Deterministic, checkpointable data pipeline.
+
+The cursor (seed + step counter) lives *inside* the training state, so a CMI
+restore resumes the exact token stream — bitwise-identical training after a
+preemption (tested in tests/test_preemption.py). This is the data-pipeline
+half of the paper's "publish partial results and continue elsewhere": a
+restored job must not re-see or skip data.
+
+Batches are synthetic (counter-based Philox; zipf-ish marginal so the loss
+has structure) — a stand-in for a real tokenized corpus reader with exactly
+the same cursor semantics. Modality stubs (vision patch embeddings, audio
+frames) are generated per the arch config, matching ``input_specs``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+class TokenPipeline:
+    def __init__(self, cfg: ArchConfig, seq_len: int, global_batch: int, seed: int = 0):
+        self.cfg = cfg
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.seed = seed
+
+    def init_state(self) -> dict[str, Any]:
+        return {"data_step": 0, "seed": self.seed}
+
+    def batch_at(self, state: dict[str, Any]) -> tuple[dict[str, np.ndarray], dict[str, Any]]:
+        """Returns (batch, next_state). Pure function of the cursor."""
+        step = int(state["data_step"])
+        rng = np.random.Generator(np.random.Philox(key=int(state["seed"]), counter=step))
+        cfg = self.cfg
+        b, s = self.global_batch, self.seq_len
+        # zipf-flavoured token ids in [0, vocab)
+        raw = rng.zipf(1.3, size=(b, s + 1)).astype(np.int64)
+        tokens_full = (raw % cfg.vocab).astype(np.int32)
+        batch: dict[str, np.ndarray] = {
+            "tokens": tokens_full[:, :s],
+            "labels": tokens_full[:, 1:],
+        }
+        if cfg.vision_prefix:
+            batch["vis_embeds"] = rng.standard_normal(
+                (b, cfg.vision_prefix, cfg.d_model), dtype=np.float32
+            ).astype("bfloat16") * np.asarray(0.1, "bfloat16")
+        if cfg.encdec:
+            batch["enc_frames"] = rng.standard_normal(
+                (b, cfg.enc_seq, cfg.d_model), dtype=np.float32
+            ).astype("bfloat16") * np.asarray(0.1, "bfloat16")
+        return batch, {"data_step": step + 1, "seed": state["seed"]}

@@ -1,0 +1,15 @@
+from repro.distributed.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    OPT_RULES,
+    batch_axes,
+    data_pspec,
+    sharding_for,
+    spec_for,
+    tree_shardings,
+)
+from repro.distributed.steps import (  # noqa: F401
+    make_decode_step,
+    make_init_fn,
+    make_prefill_step,
+    make_train_step,
+)

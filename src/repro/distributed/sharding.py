@@ -1,0 +1,143 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Every parameter/cache dimension carries a *logical* name (assigned at init in
+``repro.models``); a rule table maps each name to an ordered list of mesh-axis
+candidates. ``spec_for`` walks a tensor's dims greedily: the first candidate
+whose mesh axes are (a) present in the mesh, (b) not already consumed by an
+earlier dim of the same tensor, and (c) divide the dim size, wins; otherwise
+the dim is replicated. This is what lets yi-34b's 56 heads fall back cleanly
+on a 16-way model axis while qwen3's 16 heads shard, with zero per-arch code.
+
+Rule sets:
+  DEFAULT_RULES — parameters + activations (Megatron-style TP on `model`,
+                  experts across the full mesh, batch across pod×data).
+  OPT_RULES     — optimizer moments/master: same, plus `embed` → data
+                  (ZeRO-style: the dim that is replicated for params is
+                  sharded for optimizer state).
+  CACHE_RULES   — decode caches: batch → pod×data, seq → model
+                  (flash-decoding-style sequence-sharded KV).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils import flatten_with_paths, unflatten_from_paths
+
+Rules = Mapping[str, Sequence[tuple[str, ...]]]
+
+DEFAULT_RULES: dict[str, list[tuple[str, ...]]] = {
+    "vocab": [("model",)],
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "mlp": [("model",)],
+    "moe_mlp": [],
+    "experts": [("data", "model"), ("model",)],
+    "embed": [],
+    "head_dim": [],
+    "q_lora": [],
+    "layers": [],
+    "batch": [("pod", "data"), ("data",)],
+    "seq": [],
+}
+
+OPT_RULES: dict[str, list[tuple[str, ...]]] = {
+    **DEFAULT_RULES,
+    "embed": [("data",)],  # ZeRO: shard what params replicate
+    "mlp": [("model",)],
+    # optimizer-only fallback: when `heads`/`kv_heads` don't divide the model
+    # axis (yi's 56 heads, 8 kv heads on 16), shard the moments/master along
+    # head_dim instead — fp32 state never replicates across the model axis.
+    # GSPMD pays one params-sized all-gather at the update->cast boundary,
+    # ~0.1 s/step vs ~15 GiB/dev saved (EXPERIMENTS.md §Perf, yi iteration 6).
+    "head_dim": [("model",)],
+}
+
+CACHE_RULES: dict[str, list[tuple[str, ...]]] = {
+    **DEFAULT_RULES,
+    "seq": [("model",)],  # sequence-sharded KV cache for decode
+    "kv_heads": [],  # 8 kv heads rarely divide a 16-way model axis
+    "heads": [],
+}
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_pspec(mesh: Mesh, rank: int, dim0: int | None = None) -> P:
+    """Batch-sharded spec for inputs: dim 0 over pod×data, rest replicated.
+
+    With ``dim0`` given, falls back through shorter axis prefixes (then full
+    replication) when the batch does not divide — long_500k has batch=1.
+    """
+    ax = list(batch_axes(mesh))
+    sizes = dict(mesh.shape)
+    if dim0 is not None:
+        while ax and dim0 % int(np.prod([sizes[a] for a in ax], dtype=np.int64)) != 0:
+            ax.pop(0)  # drop "pod" first, then "data"
+    if not ax:
+        return P(*([None] * rank))
+    return P(tuple(ax) if len(ax) > 1 else ax[0], *([None] * (rank - 1)))
+
+
+def spec_for(
+    axes: tuple[str | None, ...] | None,
+    shape: tuple[int, ...],
+    mesh: Mesh,
+    rules: Rules = DEFAULT_RULES,
+) -> P:
+    """Map one tensor's logical axes to a PartitionSpec on ``mesh``."""
+    if axes is None:
+        return P()
+    sizes = dict(mesh.shape)
+    used: set[str] = set()
+    entries: list[Any] = []
+    for dim, name in enumerate(axes):
+        if dim >= len(shape):
+            break
+        chosen = None
+        for cand in rules.get(name, []) if name is not None else []:
+            cand = tuple(a for a in cand if a in sizes)
+            if not cand or any(a in used for a in cand):
+                continue
+            factor = int(np.prod([sizes[a] for a in cand], dtype=np.int64))
+            if factor > 1 and shape[dim] % factor == 0:
+                chosen = cand
+                break
+        if chosen:
+            used.update(chosen)
+            entries.append(chosen if len(chosen) > 1 else chosen[0])
+        else:
+            entries.append(None)
+    while len(entries) < len(shape):
+        entries.append(None)
+    return P(*entries)
+
+
+def sharding_for(axes, shape, mesh: Mesh, rules: Rules = DEFAULT_RULES) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(axes, tuple(shape), mesh, rules))
+
+
+def tree_shardings(axes_tree: Any, shape_tree: Any, mesh: Mesh, rules: Rules = DEFAULT_RULES):
+    """Parallel (axes, shapes) trees -> tree of NamedShardings.
+
+    ``axes_tree`` leaves are tuples of logical names (a leaf per tensor);
+    ``shape_tree`` leaves are anything with ``.shape`` (arrays or
+    ShapeDtypeStructs). Axes leaves are tuples, so we flatten the *shape*
+    tree and look the axes up by path.
+    """
+    flat_shapes, treedef = flatten_with_paths(shape_tree)
+    # axes leaves are tuples of logical names — stop descent at tuples
+    flat_axes, _ = flatten_with_paths(
+        axes_tree, is_leaf=lambda x: x is None or isinstance(x, tuple)
+    )
+    out = {}
+    for path, shp in flat_shapes.items():
+        ax = flat_axes.get(path)
+        shape = tuple(shp.shape) if hasattr(shp, "shape") else ()
+        out[path] = sharding_for(ax, shape, mesh, rules)
+    return unflatten_from_paths(treedef, out)

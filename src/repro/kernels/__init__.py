@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Three kernels, each with ``<name>.py`` (pl.pallas_call + BlockSpec tiling),
+``ops.py`` (jit'd public wrapper with padding/validation), and ``ref.py``
+(pure-jnp oracle used by tests):
+
+  flash_attention/  blockwise causal/windowed GQA attention (prefill hot-spot)
+  delta_encode/     per-chunk changed-bitmap for incremental CMIs (paper §Q3)
+  colocate/         blocked angular nearest-neighbor VIIRS→CrIS match (the
+                    paper's own application hot-spot)
+
+On this CPU container kernels execute with ``interpret=True``; on TPU the
+same ``pallas_call`` lowers to Mosaic. ``repro.kernels.common.use_interpret``
+picks automatically.
+"""

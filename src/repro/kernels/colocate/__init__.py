@@ -1,0 +1,2 @@
+from repro.kernels.colocate.ops import colocate_match  # noqa: F401
+from repro.kernels.colocate.ref import colocate_match_ref  # noqa: F401

@@ -1,0 +1,28 @@
+"""Public wrapper for the colocate kernel: padding + dispatch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.colocate.colocate import K_PAD, TILE_M, TILE_N, colocate_kernel
+from repro.kernels.common import use_interpret
+from repro.utils import round_up
+
+
+def colocate_match(
+    u: jax.Array, los: jax.Array, *, interpret: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """(idx int32[N], cos f32[N]) of the best-matching LOS for each u row."""
+    if u.ndim != 2 or los.ndim != 2 or u.shape[1] != los.shape[1]:
+        raise ValueError(f"bad shapes u{u.shape} los{los.shape}")
+    if interpret is None:
+        interpret = use_interpret()
+    n, k = u.shape
+    m = los.shape[0]
+    u_pad = jnp.zeros((round_up(max(n, 1), TILE_N), K_PAD), jnp.float32)
+    u_pad = u_pad.at[:n, :k].set(u.astype(jnp.float32))
+    los_pad = jnp.zeros((round_up(max(m, 1), TILE_M), K_PAD), jnp.float32)
+    los_pad = los_pad.at[:m, :k].set(los.astype(jnp.float32))
+    idx, cos = colocate_kernel(u_pad, los_pad, m_true=m, interpret=interpret)
+    return idx[:n, 0], cos[:n, 0]

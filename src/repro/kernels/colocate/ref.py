@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the co-location match kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def colocate_match_ref(u: jax.Array, los: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """For each unit vector in ``u`` [N,3]: (argmax_j u·los_j, max_j u·los_j).
+
+    Ties broken toward the lowest index (matches the kernel's strict-greater
+    merge with ascending tile order).
+    """
+    scores = u.astype(jnp.float32) @ los.astype(jnp.float32).T  # [N, M]
+    return jnp.argmax(scores, axis=1).astype(jnp.int32), jnp.max(scores, axis=1)

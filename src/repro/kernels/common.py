@@ -1,0 +1,30 @@
+"""Shared kernel helpers."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.utils import ceil_div, round_up  # noqa: F401  (re-export)
+
+
+def use_interpret() -> bool:
+    """Pallas interpret mode unless we are actually on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+_UINT_FOR_SIZE = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def bitcast_to_uint(x: jax.Array) -> jax.Array:
+    """Bitwise view of ``x`` as an unsigned int of the same width.
+
+    Bitwise (not value) comparison is what delta detection needs: NaN payload
+    changes count as changes, -0.0 vs +0.0 count as changes — matching what a
+    byte-level CMI hash would say.
+    """
+    dt = np.dtype(x.dtype)
+    if np.issubdtype(dt, np.unsignedinteger):
+        return x
+    target = _UINT_FOR_SIZE[dt.itemsize]
+    return jax.lax.bitcast_convert_type(x, target)

@@ -1,0 +1,2 @@
+from repro.kernels.delta_encode.ops import changed_blocks  # noqa: F401
+from repro.kernels.delta_encode.ref import changed_blocks_ref  # noqa: F401

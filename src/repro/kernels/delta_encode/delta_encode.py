@@ -1,0 +1,58 @@
+"""Pallas kernel: per-chunk changed-bitmap for incremental CMIs (paper §Q3).
+
+Workload: two equal-shaped arrays (previous and current value of one shard),
+logically split into the serializer's axis-0 chunk grid. Output: one flag per
+chunk — "did any byte change?". This is purely memory-bound (2 reads, ~0
+writes), so the kernel's job is a single fused pass at HBM bandwidth; doing
+it with a host hash costs a device→host copy of *everything* first, which is
+exactly the overhead the paper measured as dominating (§4: "the cost of disk
+I/O and network transfer of CMIs overshadows the cost of numerical
+computation").
+
+Tiling: inputs are pre-shaped by ops.py to (nblocks, elems) uint32 with both
+dims padded — nblocks to SUB (sublane 8), elems to LANE-aligned TILE_E. Grid
+is (nblocks_tiles, elems_tiles) with elems minor; each step ORs a
+(SUB, TILE_E) tile's "any difference" into the (SUB, 1) output block, which
+stays resident in VMEM across the elems sweep (output index map ignores j).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SUB = 8  # block-rows per program (sublane-aligned)
+TILE_E = 2048  # elements per program along the chunk (lane-aligned, 8 KiB u32)
+
+
+def _kernel(old_ref, new_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    diff = (old_ref[...] != new_ref[...]).any(axis=1, keepdims=True)
+    out_ref[...] = out_ref[...] | diff.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def delta_encode_blocks(old_u32: jax.Array, new_u32: jax.Array, *, interpret: bool = True):
+    """(nb_pad, e_pad) uint32 pair -> int32[nb_pad, 1] changed flags."""
+    nb, e = old_u32.shape
+    assert nb % SUB == 0 and e % TILE_E == 0, (nb, e)
+    grid = (nb // SUB, e // TILE_E)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((SUB, TILE_E), lambda i, j: (i, j)),
+            pl.BlockSpec((SUB, TILE_E), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((SUB, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, 1), jnp.int32),
+        interpret=interpret,
+    )(old_u32, new_u32)

@@ -1,0 +1,140 @@
+"""Pallas kernel: blockwise causal/windowed GQA flash attention.
+
+The prefill_32k hot-spot. Online-softmax over k-blocks with the running
+(m, l, acc) state resident in VMEM-backed output blocks (the out/row-stat
+blocks' index maps ignore the k-grid dim, so they are revisited in place
+across the k sweep and written back to HBM once). Causal/window block skip:
+fully-masked (q-block, k-block) tiles are skipped under ``pl.when`` — on TPU
+that prunes both the MXU work and the k/v VMEM traffic for the upper
+triangle, the ~2× advantage over the masked full-matrix formulation.
+
+Grid: (B, H, nq, nk), nk minor. GQA: the k/v BlockSpec index maps divide the
+head index by the group size, so kv blocks are fetched once per group.
+
+VMEM per program ≈ TQ·D (q) + 2·TK·D (k,v) + TQ·TK (scores) + TQ·D (acc)
+floats; defaults (TQ=TK=512, D=128) ≈ 1.9 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+NEG_INF = float("-inf")
+
+
+def _kernel(
+    s_k: int,  # true (unpadded) kv length
+    scale: float,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_k: int,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[0, 0] = jnp.zeros_like(o_ref[0, 0])
+        m_ref[0, 0] = jnp.full_like(m_ref[0, 0], NEG_INF)
+        l_ref[0, 0] = jnp.zeros_like(l_ref[0, 0])
+
+    q0 = qi * block_q
+    k0 = ki * block_k
+    # block-level skip: no (q,k) pair in this tile is visible
+    live = jnp.asarray(True)
+    if causal:
+        live = jnp.logical_and(live, k0 <= q0 + block_q - 1)
+    if window and window > 0:
+        live = jnp.logical_and(live, k0 + block_k - 1 > q0 - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (TQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (TK, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (TQ, TK)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < s_k  # padded keys
+        if causal:
+            mask &= kpos <= qpos
+        if window and window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[0, 0]  # (TQ, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # rows with no visible key yet keep m=-inf; guard exp(-inf - -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(jnp.where(mask, s - m_safe, NEG_INF))
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p, axis=1, keepdims=True)
+        o_ref[0, 0] = o_ref[0, 0] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[0, 0] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        o_ref[0, 0] = o_ref[0, 0] / jnp.maximum(l_ref[0, 0], 1e-30)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("s_k", "scale", "causal", "window", "block_q", "block_k", "group", "interpret"),
+)
+def flash_attention_padded(
+    q: jax.Array,  # (B, H, Sq_pad, D)
+    k: jax.Array,  # (B, Hkv, Sk_pad, D)
+    v: jax.Array,
+    *,
+    s_k: int,
+    scale: float,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_k: int,
+    group: int,
+    interpret: bool,
+):
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    assert sq % block_q == 0 and sk % block_k == 0
+    grid = (b, h, sq // block_q, sk // block_k)
+    out, _, _ = pl.pallas_call(
+        functools.partial(_kernel, s_k, scale, causal, window, block_q, block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, qi, ki, g=group: (b_, h_ // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, qi, ki, g=group: (b_, h_ // g, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, block_q, 1), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, block_q, 1), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, sq, d), jnp.float32),  # acc
+            jax.ShapeDtypeStruct((b, h, sq, 1), jnp.float32),  # m
+            jax.ShapeDtypeStruct((b, h, sq, 1), jnp.float32),  # l
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

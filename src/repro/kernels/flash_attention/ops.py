@@ -1,0 +1,51 @@
+"""Public wrapper: shape checks, padding, block sizing, dispatch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import use_interpret
+from repro.kernels.flash_attention.flash_attention import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_Q,
+    flash_attention_padded,
+)
+from repro.utils import round_up
+
+
+def flash_attention(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, Hkv, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool | None = None,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    bk, hkv, sk, dk = k.shape
+    if (bk, dk) != (b, d) or v.shape != k.shape:
+        raise ValueError(f"shape mismatch q{q.shape} k{k.shape} v{v.shape}")
+    if h % hkv:
+        raise ValueError(f"n_heads {h} not a multiple of n_kv_heads {hkv}")
+    if interpret is None:
+        interpret = use_interpret()
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    block_q = min(block_q, max(16, sq))
+    block_k = min(block_k, max(16, sk))
+    sq_p = round_up(sq, block_q)
+    sk_p = round_up(sk, block_k)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+    out = flash_attention_padded(
+        qp, kp, vp,
+        s_k=sk, scale=float(scale), causal=causal, window=int(window),
+        block_q=block_q, block_k=block_k, group=h // hkv, interpret=interpret,
+    )
+    return out[:, :, :sq].astype(q.dtype)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle: full-matrix GQA attention with causal/window masks."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, Hkv, Sk, D)
+    v: jax.Array,  # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qf = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bktd->bkgqt", qf, kf) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window and window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,bktd->bkgqd", p, vf)
+    return out.reshape(b, h, sq, d).astype(q.dtype)

@@ -1,0 +1,307 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be the very first two lines — jax locks the device count on first init:
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import SHAPES, get_config, list_archs  # noqa: E402
+from repro.configs.base import ArchConfig, InputShape  # noqa: E402
+from repro.distributed.steps import (  # noqa: E402
+    batch_shardings,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    state_struct_for,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.model import input_specs  # noqa: E402
+from repro.optim.adamw import AdamWConfig  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing (collective bytes are NOT in cost_analysis)
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'bf16[2048,512]' shape token (0 for unknown dtypes)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in (post-SPMD) HLO.
+
+    Output-shape bytes are the canonical per-device payload: all-reduce
+    in==out; all-gather out == full gathered tensor; reduce-scatter out ==
+    the local shard. Counts and bytes reported per collective kind; ops
+    inside while-loop bodies (scan over layers) are multiplied by the trip
+    count parsed from the loop's induction-variable compare when present.
+    """
+    by_kind = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    # trip counts: map while-body computation name -> trip count
+    trip = _while_trip_counts(hlo_text)
+    current_comp = None
+    for line in hlo_text.splitlines():
+        mcomp = re.match(r"\s*%?([\w.\-]+)\s*\([^)]*\)\s*->", line)
+        if line and not line[0].isspace():
+            m2 = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m2:
+                current_comp = m2.group(1)
+        s = line.strip()
+        for kind in _COLLECTIVES:
+            # "%x = bf16[...]{...} all-reduce(" or "all-reduce-start("
+            if re.search(rf"[)\s}}]\s*{kind}(-start)?\(", s) or re.search(
+                rf"=\s*\(?[\w\[\],{{}}\s/*]*\)?\s{kind}(-start)?\(", s
+            ):
+                lhs = s.split("=", 1)
+                if len(lhs) != 2:
+                    continue
+                nbytes = _shape_bytes(lhs[1].split(kind)[0])
+                mult = trip.get(current_comp, 1)
+                by_kind[kind]["count"] += mult
+                by_kind[kind]["bytes"] += nbytes * mult
+                break
+    total = sum(v["bytes"] for v in by_kind.values())
+    return {"total_bytes": total, "by_kind": by_kind}
+
+
+def _while_trip_counts(hlo_text: str) -> dict[str, int]:
+    """Best-effort scan trip counts: body comp name -> iterations."""
+    out: dict[str, int] = {}
+    # pattern: while(...), condition=%cond_N, body=%body_N ... with constant
+    # trip counts XLA usually annotates: backend_config or known_trip_count
+    for m in re.finditer(
+        r'body=%?([\w.\-]+).{0,400}?known_trip_count=\{"n":"(\d+)"\}', hlo_text, re.S
+    ):
+        out[m.group(1)] = int(m.group(2))
+    for m in re.finditer(
+        r'known_trip_count=\{"n":"(\d+)"\}.{0,400}?body=%?([\w.\-]+)', hlo_text, re.S
+    ):
+        out.setdefault(m.group(2), int(m.group(1)))
+    return out
+
+
+def _memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+        "host_argument_size_in_bytes",
+        "host_output_size_in_bytes",
+        "host_temp_size_in_bytes",
+        "peak_memory_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+
+
+def should_skip(cfg: ArchConfig, shape: InputShape) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return (
+            "long_500k needs sub-quadratic attention; this arch is pure "
+            "full-attention (see DESIGN.md §4)"
+        )
+    return None
+
+
+def build_lowered(cfg: ArchConfig, shape: InputShape, mesh, *, opts: dict | None = None):
+    opts = opts or {}
+    specs = input_specs(cfg, shape)
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype=cfg.opt_moment_dtype)
+        step, st_sh, m_sh = make_train_step(
+            cfg, mesh, opt_cfg,
+            seq_shard=opts.get("seq_shard", False),
+            moe_buf_shard=opts.get("moe_buf_shard", False),
+        )
+        state_struct = state_struct_for(cfg, opt_cfg)
+        b_sh = batch_shardings(specs, mesh)
+        return jax.jit(
+            step, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, m_sh), donate_argnums=0
+        ).lower(state_struct, specs)
+    if shape.kind == "prefill":
+        step, p_sh, out_sh = make_prefill_step(cfg, mesh, shape)
+        from repro.distributed.steps import model_axes_for
+
+        _, params_struct = model_axes_for(cfg)
+        b_sh = batch_shardings(specs, mesh)
+        return jax.jit(step, in_shardings=(p_sh, b_sh), out_shardings=out_sh).lower(
+            params_struct, specs
+        )
+    if shape.kind == "decode":
+        step, p_sh, c_sh = make_decode_step(cfg, mesh, shape)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.distributed.steps import model_axes_for
+        from repro.distributed.sharding import data_pspec
+
+        _, params_struct = model_axes_for(cfg)
+        nb = shape.global_batch
+        tok_sh = NamedSharding(mesh, data_pspec(mesh, 2, nb))
+        pos_sh = NamedSharding(mesh, P())
+        logits_sh = NamedSharding(mesh, data_pspec(mesh, 3, nb))
+        return jax.jit(
+            step,
+            in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+            out_shardings=(logits_sh, c_sh),
+            donate_argnums=1,
+        ).lower(params_struct, specs["caches"], specs["tokens"], specs["pos"])
+    raise ValueError(shape.kind)
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    out_dir: Path,
+    force: bool = False,
+    *,
+    variant: str = "",
+    opts: dict | None = None,
+    cfg_overrides: dict | None = None,
+) -> dict:
+    tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    if variant:
+        tag += f"__{variant}"
+    out_file = out_dir / f"{tag}.json"
+    if out_file.exists() and not force:
+        return json.loads(out_file.read_text())
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.with_(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    rec: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    skip = should_skip(cfg, shape)
+    if skip:
+        rec["skipped"] = skip
+        out_dir.mkdir(parents=True, exist_ok=True)
+        out_file.write_text(json.dumps(rec, indent=1))
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        lowered = build_lowered(cfg, shape, mesh, opts=opts)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        rec["memory"] = _memory_analysis_dict(compiled)
+        cost = compiled.cost_analysis() or {}
+        rec["cost"] = {
+            k: float(cost[k])
+            for k in ("flops", "bytes accessed", "bytes accessedout{}", "optimal_seconds")
+            if isinstance(cost.get(k), (int, float))
+        }
+        hlo = compiled.as_text()
+        from repro.launch.hlo_stats import analyze_hlo
+
+        rec["hlo"] = analyze_hlo(hlo)  # trip-count-aware flops/bytes/collectives
+        rec["collectives"] = rec["hlo"]["collectives"]
+        rec["hlo_bytes"] = len(hlo)
+        rec["ok"] = True
+        print(compiled.memory_analysis())
+        print({k: v for k, v in rec["cost"].items()})
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_file.write_text(json.dumps(rec, indent=1))
+    status = "OK" if rec.get("ok") else ("SKIP" if "skipped" in rec else "FAIL")
+    print(f"[dryrun] {tag}: {status} ({rec.get('total_s', 0)}s)")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, choices=[*SHAPES, None], help="shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true", help="2x16x16 (512 chips) mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="", help="suffix for perf-iteration cells")
+    ap.add_argument("--seq-shard", action="store_true", help="sequence-parallel residual stream")
+    ap.add_argument("--moe-buf-shard", action="store_true", help="expert-local grouped GEMM")
+    ap.add_argument("--remat", default=None, choices=["nothing", "dots", "full", None])
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    opts = {"seq_shard": args.seq_shard, "moe_buf_shard": args.moe_buf_shard}
+    cfg_overrides = {"remat": args.remat} if args.remat else None
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(
+                    arch, shape, mp, out_dir, force=args.force,
+                    variant=args.variant, opts=opts, cfg_overrides=cfg_overrides,
+                )
+                if not rec.get("ok") and "skipped" not in rec:
+                    n_fail += 1
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,340 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so a scanned
+60-layer model reports ~1 layer of FLOPs (verified empirically — see
+EXPERIMENTS.md §Dry-run notes). This module re-derives roofline inputs from
+``compiled.as_text()`` with loop bodies multiplied by their
+``known_trip_count``:
+
+  flops        — 2·prod(out_dims)·prod(contracted_dims) per dot/convolution,
+                 recursing through fusions/calls/while bodies;
+  bytes        — per op: output + operand bytes. Operands that a fusion
+                 consumes via ``dynamic-slice`` count the *slice*, and
+                 ``dynamic-update-slice`` roots count the *update* — so a
+                 scan sweeping a stacked (L, …) parameter/cache buffer
+                 accumulates exactly one full pass over it, not L passes;
+  collectives  — count + payload (output-shape) bytes per kind.
+
+All numbers are per-device (the compiled module is the per-device SPMD
+program). The roofline divides by per-chip peaks, which is equivalent to
+the global-total-over-all-chips form in the spec.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "u4": 1, "s4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_FREE_OPS = (
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id",
+)
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+
+
+def _shape_dims(tok):
+    dt, dims = tok
+    if dt not in _DTYPE_BYTES:
+        return 0, []
+    d = [int(x) for x in dims.split(",")] if dims else []
+    n = 1
+    for x in d:
+        n *= x
+    return n * _DTYPE_BYTES[dt], d
+
+
+def _first_shape(s):
+    m = _SHAPE_RE.search(s)
+    return _shape_dims(m.groups()) if m else (0, [])
+
+
+def _all_shape_bytes(s):
+    return sum(_shape_dims(g)[0] for g in _SHAPE_RE.findall(s))
+
+
+def _strip_meta(rhs: str) -> str:
+    rhs = re.sub(r"/\*[^*]*\*/", "", rhs)  # tuple-index comments: /*index=5*/
+    rhs = re.sub(r"metadata=\{[^}]*\}", "", rhs)
+    rhs = re.sub(r"backend_config=\{.*$", "", rhs)
+    return rhs
+
+
+# op name: the token immediately before the operand paren, after the output
+# type (which never contains `word(` once comments are stripped)
+_OPNAME_RE = re.compile(r"(?:^|[\s)}])([a-z][\w\-]*)\(")
+
+
+@dataclass
+class _Op:
+    name: str
+    op: str
+    out_bytes: int
+    out_dims: list
+    refs: list  # operand %names (positional, first paren group)
+    rhs: str
+    trip: int = 1
+    is_root: bool = False
+
+
+@dataclass
+class _Comp:
+    name: str
+    ops: list = field(default_factory=list)
+    defs: dict = field(default_factory=dict)  # %name -> _Op
+    calls: list = field(default_factory=list)  # (callee, mult, into_bytes)
+
+
+def parse_hlo(text: str) -> tuple[dict[str, "_Comp"], str]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    entry = ""
+    for raw in text.splitlines():
+        if raw and not raw[0].isspace():
+            m = _HEAD_RE.match(raw)
+            if m and "{" in raw:
+                cur = _Comp(m.group(1))
+                comps[cur.name] = cur
+                if raw.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(raw)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        trip = 1
+        tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rhs)
+        if tm:
+            trip = int(tm.group(1))
+        rhs_clean = _strip_meta(rhs)
+        opm = _OPNAME_RE.search(rhs_clean)
+        if opm:
+            op = opm.group(1)
+            head = rhs_clean[: opm.start(1)]
+            tail = rhs_clean[opm.end() :]  # starts right after "opname("
+        else:
+            op = ""
+            head = rhs_clean.split("(", 1)[0]
+            tail = ""
+        out_bytes = _all_shape_bytes(head)
+        _, out_dims = _first_shape(head)
+        arg_str = tail.split("),", 1)[0] if tail else ""
+        refs = re.findall(r"%([\w.\-]+)", arg_str)
+        rec = _Op(name, op, out_bytes, out_dims, refs, rhs_clean, trip, raw.lstrip().startswith("ROOT"))
+        cur.ops.append(rec)
+        cur.defs[name] = rec
+        for kw in ("body", "condition", "to_apply", "calls"):
+            for cm in re.finditer(rf"{kw}=%?([\w.\-]+)", rhs_clean):
+                mult = trip if kw in ("body", "condition") else 1
+                cur.calls.append((cm.group(1), mult, kw == "body"))
+    return comps, entry
+
+
+_PASSTHROUGH = ("convert", "bitcast", "copy", "reshape", "transpose")
+
+
+def _fusion_param_access(comp: _Comp) -> dict[int, int]:
+    """Per fused-computation parameter: bytes actually touched per call.
+
+    TPU-semantics adjustment (documented in EXPERIMENTS.md §Dry-run): XLA-CPU
+    lowers bf16 scan carries through full-buffer convert→select→convert
+    chains that a TPU compile keeps in-place. We therefore follow single-use
+    convert/bitcast/copy chains from each parameter; a chain terminating in a
+    ``dynamic-slice`` counts the slice, one terminating as the *target*
+    (operand 0) of a ``dynamic-update-slice`` counts the update (in-place
+    write), anything else counts the full parameter.
+    """
+    params: dict[str, tuple[int, int]] = {}  # %name -> (index, full bytes)
+    consumers: dict[str, list[_Op]] = {}
+    for o in comp.ops:
+        if o.op == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", o.rhs)
+            if pm:
+                params[o.name] = (int(pm.group(1)), o.out_bytes)
+        for r in o.refs:
+            consumers.setdefault(r, []).append(o)
+
+    def chase(name: str, depth: int = 0) -> int | None:
+        """Touched bytes for buffer ``name`` or None (= full)."""
+        touched = 0
+        for o in consumers.get(name, []):
+            if o.op == "dynamic-slice" and o.refs and o.refs[0] == name:
+                touched = max(touched, o.out_bytes)
+            elif o.op == "dynamic-update-slice" and o.refs and o.refs[0] == name:
+                upd = comp.defs.get(o.refs[1]) if len(o.refs) > 1 else None
+                touched = max(touched, upd.out_bytes if upd else 0)
+            elif o.op in _PASSTHROUGH and depth < 8:
+                sub = chase(o.name, depth + 1)
+                if sub is None:
+                    return None
+                touched = max(touched, sub)
+            else:
+                return None  # genuinely consumed in full
+        return touched
+
+    access: dict[int, int] = {}
+    for pname, (idx, full) in params.items():
+        if pname not in consumers:
+            access[idx] = 0
+            continue
+        t = chase(pname)
+        access[idx] = full if t is None or t == 0 else min(t, full)
+    return access
+
+
+def _fusion_out_bytes(comp: _Comp) -> int | None:
+    """Adjusted output bytes when the fusion root is (a convert/bitcast chain
+    over) a dynamic-update-slice into a carried buffer — the written traffic
+    is the update, not the whole buffer. None = use declared output."""
+    root = next((o for o in comp.ops if o.is_root), None)
+    if root is None:
+        return None
+
+    def resolve(o: _Op, depth: int = 0) -> int | None:
+        if o.op == "dynamic-update-slice" and len(o.refs) >= 2:
+            upd = comp.defs.get(o.refs[1])
+            return upd.out_bytes if upd else None
+        if o.op in _PASSTHROUGH and o.refs and depth < 8:
+            src = comp.defs.get(o.refs[0])
+            return resolve(src, depth + 1) if src else None
+        return None
+
+    if root.op == "tuple":
+        total = 0
+        adjusted = False
+        for r in root.refs:
+            o = comp.defs.get(r)
+            if o is None:
+                return None
+            u = resolve(o)
+            if u is not None:
+                total += u
+                adjusted = True
+            else:
+                total += o.out_bytes
+        return total if adjusted else None
+    return resolve(root)
+
+
+def analyze_hlo(text: str) -> dict:
+    comps, entry = parse_hlo(text)
+    f_access = {n: _fusion_param_access(c) for n, c in comps.items()}
+    f_out = {n: _fusion_out_bytes(c) for n, c in comps.items()}
+    memo: dict[str, tuple] = {}
+
+    def comp_own(c: _Comp) -> tuple[float, float, dict]:
+        fl = 0.0
+        by = 0.0
+        coll: dict = {}
+        for o in c.ops:
+            if o.op in _FREE_OPS:
+                continue
+            # ---- flops (dot / convolution) ----
+            if o.op in ("dot", "convolution"):
+                out_elems = 1
+                for d in o.out_dims:
+                    out_elems *= d
+                k_elems = 1
+                ldims: list = []
+                if o.refs:
+                    ref = c.defs.get(o.refs[0])
+                    if ref is not None:
+                        ldims = ref.out_dims
+                if not ldims:
+                    sm = _SHAPE_RE.search(o.rhs.split("(", 1)[1] if "(" in o.rhs else "")
+                    if sm:
+                        _, ldims = _shape_dims(sm.groups())
+                cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", o.rhs)
+                if o.op == "dot" and ldims and cd:
+                    for i in (int(x) for x in cd.group(1).split(",") if x):
+                        if i < len(ldims):
+                            k_elems *= ldims[i]
+                elif o.op == "convolution" and o.refs and len(o.refs) > 1:
+                    kref = c.defs.get(o.refs[1])
+                    if kref is not None:
+                        for d in kref.out_dims[:-1]:
+                            k_elems *= d
+                fl += 2.0 * out_elems * k_elems
+            # ---- bytes ----
+            callee = None
+            cm = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", o.rhs)
+            if cm:
+                callee = cm.group(1)
+            if o.op == "fusion" and callee in f_access:
+                out_b = f_out.get(callee)
+                b = float(out_b if out_b is not None else o.out_bytes)
+                acc = f_access[callee]
+                for i, r in enumerate(o.refs):
+                    if i in acc:
+                        b += acc[i]
+                    else:
+                        ref = c.defs.get(r)
+                        b += ref.out_bytes if ref else 0
+            elif o.op == "dynamic-slice":
+                b = float(o.out_bytes) * 2  # read slice + write slice
+            elif o.op == "dynamic-update-slice":
+                upd = c.defs.get(o.refs[1]) if len(o.refs) > 1 else None
+                b = 2.0 * (upd.out_bytes if upd else 0)
+            else:
+                b = float(o.out_bytes)
+                for r in o.refs:
+                    ref = c.defs.get(r)
+                    b += ref.out_bytes if ref else 0
+            by += b
+            # ---- collectives ----
+            for kind in _COLLECTIVES:
+                if o.op == kind or o.op == kind + "-start":
+                    e = coll.setdefault(kind, {"count": 0, "bytes": 0.0})
+                    e["count"] += 1
+                    e["bytes"] += float(o.out_bytes)
+                    break
+        return fl, by, coll
+
+    def total(name: str, stack=()):
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return 0.0, 0.0, {}
+        c = comps[name]
+        fl, by, coll = comp_own(c)
+        for callee, mult, into_bytes in c.calls:
+            cf, cb, cc = total(callee, stack + (name,))
+            fl += cf * mult
+            if into_bytes:
+                by += cb * mult
+            for k, v in cc.items():
+                e = coll.setdefault(k, {"count": 0, "bytes": 0.0})
+                e["count"] += v["count"] * mult
+                e["bytes"] += v["bytes"] * mult
+        memo[name] = (fl, by, coll)
+        return memo[name]
+
+    fl, by, coll = total(entry)
+    return {
+        "flops": fl,
+        "bytes": by,
+        "collectives": {
+            "total_bytes": sum(v["bytes"] for v in coll.values()),
+            "total_count": sum(v["count"] for v in coll.values()),
+            "by_kind": coll,
+        },
+    }
+
+
+if __name__ == "__main__":  # python -m repro.launch.hlo_stats <hlo.txt>
+    import sys
+
+    print(json.dumps(analyze_hlo(open(sys.argv[1]).read()), indent=1))

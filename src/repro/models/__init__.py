@@ -1,0 +1,10 @@
+"""Model zoo: composable JAX definitions for the 10 assigned architectures.
+
+Params are plain nested dicts with layers stacked on a leading ``L`` axis
+(so the forward pass is a ``lax.scan`` over layers — compact HLO at 60-80
+layers). Every init returns ``(params, axes)`` where ``axes`` mirrors the
+param tree with per-dimension *logical* axis names; the distributed layer
+maps those onto mesh axes (``repro.distributed.sharding``).
+"""
+
+from repro.models.model import Model, input_specs  # noqa: F401

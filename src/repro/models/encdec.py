@@ -1,0 +1,194 @@
+"""Encoder-decoder backbone (whisper-style): LayerNorm + GELU MLP + biases,
+learned positions, bidirectional encoder, causal decoder with cross-attention.
+
+The conv frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings (B, enc_seq, E) from ``input_specs()``. The
+decoder's learned position table is sized for the assigned decode_32k shape
+(nominal Whisper is 448 positions — DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import gelu_mlp, init_dense, init_embedding, layernorm, pdtype
+
+MAX_DEC_POS = 32768  # assigned decode_32k shape
+
+
+def _init_ln(n_layers, e, dt, name, p, a):
+    p[f"{name}_s"] = jnp.ones((n_layers, e), dt); a[f"{name}_s"] = ("layers", "embed")
+    p[f"{name}_b"] = jnp.zeros((n_layers, e), dt); a[f"{name}_b"] = ("layers", "embed")
+
+
+def _init_mlp(key, cfg, n_layers):
+    e, f = cfg.d_model, cfg.d_ff
+    dt = pdtype(cfg)
+    k1, k2 = jax.random.split(key)
+    p, a = {}, {}
+    p["w_in"], a["w_in"] = init_dense(k1, (n_layers, e, f), ("layers", "embed", "mlp"), dt)
+    p["b_in"] = jnp.zeros((n_layers, f), dt); a["b_in"] = ("layers", "mlp")
+    p["w_out"], a["w_out"] = init_dense(k2, (n_layers, f, e), ("layers", "mlp", "embed"), dt)
+    p["b_out"] = jnp.zeros((n_layers, e), dt); a["b_out"] = ("layers", "embed")
+    return p, a
+
+
+def init_encdec(key, cfg: ArchConfig):
+    dt = pdtype(cfg)
+    e = cfg.d_model
+    ks = jax.random.split(key, 10)
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    params["embed"], axes["embed"] = init_embedding(ks[0], cfg)
+    params["pos_enc"] = (jax.random.normal(ks[1], (cfg.enc_seq, e)) * 0.01).astype(dt)
+    axes["pos_enc"] = (None, "embed")
+    params["pos_dec"] = (jax.random.normal(ks[2], (MAX_DEC_POS, e)) * 0.01).astype(dt)
+    axes["pos_dec"] = (None, "embed")
+
+    enc_p: dict[str, Any] = {}
+    enc_a: dict[str, Any] = {}
+    _init_ln(cfg.enc_layers, e, dt, "ln1", enc_p, enc_a)
+    enc_p["attn"], enc_a["attn"] = attn.init_gqa(ks[3], cfg, cfg.enc_layers)
+    _init_ln(cfg.enc_layers, e, dt, "ln2", enc_p, enc_a)
+    mp, ma = _init_mlp(ks[4], cfg, cfg.enc_layers)
+    enc_p["mlp"], enc_a["mlp"] = mp, ma
+    params["enc"], axes["enc"] = enc_p, enc_a
+    params["enc_final_s"] = jnp.ones((e,), dt); axes["enc_final_s"] = ("embed",)
+    params["enc_final_b"] = jnp.zeros((e,), dt); axes["enc_final_b"] = ("embed",)
+
+    dec_p: dict[str, Any] = {}
+    dec_a: dict[str, Any] = {}
+    _init_ln(cfg.n_layers, e, dt, "ln1", dec_p, dec_a)
+    dec_p["self_attn"], dec_a["self_attn"] = attn.init_gqa(ks[5], cfg, cfg.n_layers)
+    _init_ln(cfg.n_layers, e, dt, "lnx", dec_p, dec_a)
+    dec_p["cross_attn"], dec_a["cross_attn"] = attn.init_gqa(ks[6], cfg, cfg.n_layers)
+    _init_ln(cfg.n_layers, e, dt, "ln2", dec_p, dec_a)
+    mp, ma = _init_mlp(ks[7], cfg, cfg.n_layers)
+    dec_p["mlp"], dec_a["mlp"] = mp, ma
+    params["dec"], axes["dec"] = dec_p, dec_a
+    params["final_s"] = jnp.ones((e,), dt); axes["final_s"] = ("embed",)
+    params["final_b"] = jnp.zeros((e,), dt); axes["final_b"] = ("embed",)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(params, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """frames: (B, T_enc, E) stub embeddings -> encoder states."""
+    x = frames + params["pos_enc"][None, : frames.shape[1]]
+    eps = cfg.norm_eps
+
+    def body(h, pl):
+        a_in = layernorm(h, pl["ln1_s"], pl["ln1_b"], eps)
+        h = h + attn.gqa_train(pl["attn"], a_in, cfg, causal=False, use_rope=False)
+        m_in = layernorm(h, pl["ln2_s"], pl["ln2_b"], eps)
+        h = h + gelu_mlp(m_in, pl["mlp"]["w_in"], pl["mlp"]["b_in"], pl["mlp"]["w_out"], pl["mlp"]["b_out"])
+        return h, None
+
+    body = jax.checkpoint(body, prevent_cse=False)  # per-layer remat
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return layernorm(x, params["enc_final_s"], params["enc_final_b"], eps)
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+
+
+def _dec_block_train(pl, h, enc_out, cfg: ArchConfig):
+    eps = cfg.norm_eps
+    a_in = layernorm(h, pl["ln1_s"], pl["ln1_b"], eps)
+    h = h + attn.gqa_train(pl["self_attn"], a_in, cfg, causal=True, use_rope=False)
+    x_in = layernorm(h, pl["lnx_s"], pl["lnx_b"], eps)
+    h = h + attn.gqa_train(pl["cross_attn"], x_in, cfg, causal=False, use_rope=False, kv_source=enc_out)
+    m_in = layernorm(h, pl["ln2_s"], pl["ln2_b"], eps)
+    h = h + gelu_mlp(m_in, pl["mlp"]["w_in"], pl["mlp"]["b_in"], pl["mlp"]["w_out"], pl["mlp"]["b_out"])
+    return h
+
+
+def decode_train(params, tokens: jax.Array, enc_out: jax.Array, cfg: ArchConfig) -> jax.Array:
+    from repro.models.layers import embed
+
+    x = embed(tokens, params["embed"]) + params["pos_dec"][None, : tokens.shape[1]]
+
+    def body(h, pl):
+        return _dec_block_train(pl, h, enc_out, cfg), None
+
+    body = jax.checkpoint(body, prevent_cse=False)  # per-layer remat
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    return layernorm(x, params["final_s"], params["final_b"], cfg.norm_eps)
+
+
+def _cross_cache(pl, enc_out, cfg):
+    k = jnp.einsum("bse,ehd->bshd", enc_out, pl["cross_attn"]["wk"])
+    v = jnp.einsum("bse,ehd->bshd", enc_out, pl["cross_attn"]["wv"])
+    if cfg.attn_bias:
+        k = k + pl["cross_attn"]["bk"]
+        v = v + pl["cross_attn"]["bv"]
+    return {"xk": k, "xv": v}
+
+
+def prefill(params, tokens, enc_out, cfg: ArchConfig, s_max: int):
+    """Returns (hidden, caches): self k/v (padded to s_max) + cross k/v."""
+    from repro.models.layers import embed
+
+    x = embed(tokens, params["embed"]) + params["pos_dec"][None, : tokens.shape[1]]
+    eps = cfg.norm_eps
+
+    def body(h, pl):
+        a_in = layernorm(h, pl["ln1_s"], pl["ln1_b"], eps)
+        self_cache = attn.gqa_prefill_cache(pl["self_attn"], a_in, cfg, s_max, use_rope=False)
+        h = _dec_block_train(pl, h, enc_out, cfg)
+        cache = {**self_cache, **_cross_cache(pl, enc_out, cfg)}
+        return h, cache
+
+    x, caches = jax.lax.scan(body, x, params["dec"])
+    return layernorm(x, params["final_s"], params["final_b"], cfg.norm_eps), caches
+
+
+def _cross_decode(pl, x, cache, cfg: ArchConfig):
+    import numpy as np
+
+    b, s1, e = x.shape
+    kv_n, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    dh = cfg.resolved_head_dim
+    q = jnp.einsum("bse,ehd->bshd", x, pl["cross_attn"]["wq"])
+    if cfg.attn_bias:
+        q = q + pl["cross_attn"]["bq"]
+    qg = q.reshape(b, s1, kv_n, g, dh)
+    sc = attn._grouped_scores(qg, cache["xk"]) / np.sqrt(dh)
+    probs = jax.nn.softmax(sc, axis=-1)
+    out = attn._grouped_out(probs, cache["xv"]).reshape(b, s1, cfg.n_heads, dh)
+    y = jnp.einsum("bshd,hde->bse", out, pl["cross_attn"]["wo"])
+    if cfg.attn_bias:
+        y = y + pl["cross_attn"]["bo"]
+    return y
+
+
+def decode_step(params, token_embed_x, caches, pos, cfg: ArchConfig):
+    """x: (B,1,E) embedded token (+pos). Returns (hidden, new caches)."""
+    eps = cfg.norm_eps
+
+    def body(h, xs):
+        pl, cache = xs
+        a_in = layernorm(h, pl["ln1_s"], pl["ln1_b"], eps)
+        y, self_cache = attn.gqa_decode(
+            pl["self_attn"], a_in, {"k": cache["k"], "v": cache["v"]}, pos, cfg, use_rope=False
+        )
+        h = h + y
+        x_in = layernorm(h, pl["lnx_s"], pl["lnx_b"], eps)
+        h = h + _cross_decode(pl, x_in, cache, cfg)
+        m_in = layernorm(h, pl["ln2_s"], pl["ln2_b"], eps)
+        h = h + gelu_mlp(m_in, pl["mlp"]["w_in"], pl["mlp"]["b_in"], pl["mlp"]["w_out"], pl["mlp"]["b_out"])
+        return h, {**self_cache, "xk": cache["xk"], "xv": cache["xv"]}
+
+    x, new_caches = jax.lax.scan(body, token_embed_x, (params["dec"], caches))
+    return layernorm(x, params["final_s"], params["final_b"], cfg.norm_eps), new_caches

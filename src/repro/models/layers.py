@@ -1,0 +1,131 @@
+"""Shared layers: norms, RoPE, embeddings, chunked fp32 cross-entropy."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def pdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_dense(key, shape, axes, dtype, scale: float | None = None):
+    """Truncated-normal init; fan-in scaling by default. Returns (param, axes)."""
+    fan_in = int(np.prod([s for s, a in zip(shape, axes) if a != "layers"][:-1])) or 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale
+    return w.astype(dtype), tuple(axes)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (GPT-NeoX half-rotation)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n_heads, head_dim); positions: (S,) or (..., S) int."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    angles = positions.astype(jnp.float32)[..., :, None] * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding + chunked fp32 cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, cfg: ArchConfig):
+    emb = jax.random.normal(key, (cfg.vocab, cfg.d_model), jnp.float32) * 0.02
+    return emb.astype(pdtype(cfg)), ("vocab", "embed")
+
+
+def embed(tokens: jax.Array, emb: jax.Array) -> jax.Array:
+    return jnp.take(emb, tokens, axis=0)
+
+
+def unembed_logits(h: jax.Array, emb_out: jax.Array) -> jax.Array:
+    """h: (..., E) -> logits (..., V); fp32 accumulation."""
+    return jnp.einsum(
+        "...e,ve->...v", h, emb_out, preferred_element_type=jnp.float32
+    )
+
+
+def softmax_xent_chunked(
+    h: jax.Array,  # (B, S, E) final hidden states
+    emb_out: jax.Array,  # (V, E) unembedding
+    labels: jax.Array,  # (B, S) int32; -1 = ignore
+    chunk: int,
+) -> jax.Array:
+    """Mean next-token loss with fp32 logits materialised only per S-chunk.
+
+    Keeps the fp32 (B, chunk, V) transient bounded — at 256k vocab a full
+    (B, S, V) fp32 logits tensor would dominate HBM (DESIGN.md §5).
+    """
+    b, s, e = h.shape
+    chunk = min(chunk, s)
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    h_c = h.reshape(b, nc, chunk, e).transpose(1, 0, 2, 3)  # (nc, B, chunk, E)
+    l_c = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hc, lc = xs
+        logits = unembed_logits(hc, emb_out)  # (B, chunk, V) fp32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.clip(lc, 0, logits.shape[-1] - 1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - gold) * valid)
+        cnt = cnt + jnp.sum(valid)
+        return (tot, cnt), None
+
+    # checkpoint: bwd recomputes each chunk's fp32 logits instead of keeping
+    # every chunk's (B, chunk, V) tensor alive across the whole scan
+    body = jax.checkpoint(body, prevent_cse=False)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (h_c, l_c))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...e,ef->...f", x, w_gate)
+    u = jnp.einsum("...e,ef->...f", x, w_up)
+    return jnp.einsum("...f,fe->...e", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x: jax.Array, w_in: jax.Array, b_in, w_out: jax.Array, b_out) -> jax.Array:
+    hline = jnp.einsum("...e,ef->...f", x, w_in) + b_in
+    return jnp.einsum("...f,fe->...e", jax.nn.gelu(hline), w_out) + b_out

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts FFN: sort-based grouped dispatch (TPU-native).
+
+Design note (DESIGN.md §5): the classic GShard dense one-hot dispatch einsum
+is O(T²·k/G) FLOPs — at 1M tokens it dwarfs the expert compute itself and
+would poison the HLO-FLOPs roofline. Instead tokens are routed per *group*
+(groups align with data shards so routing is shard-local), assignments are
+sorted by expert id, positioned via binary search against expert starts, and
+scattered into a capacity-bounded (X, C, E) buffer that feeds a grouped GEMM
+(`xce,xef->xcf`) — the MegaBlocks/gmm idea expressed in XLA ops. Over-
+capacity tokens are dropped (their combine weight is zero), standard for
+capacity-factor routing.
+
+Routing flavours:
+  softmax  — top-k of softmax(logits), gates renormalised over the k chosen
+  sigmoid  — DeepSeek-V3 aux-free: selection by sigmoid score + learned
+             static bias, gates = normalised sigmoid scores (bias is a
+             parameter here; the online bias controller is a training-loop
+             detail we note as omitted).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import init_dense, pdtype, swiglu
+
+
+def init_moe(key, cfg: ArchConfig, n_layers: int):
+    e, x_, f = cfg.d_model, cfg.n_experts, cfg.resolved_moe_d_ff
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 8)
+    p, a = {}, {}
+    p["w_router"], a["w_router"] = init_dense(ks[0], (n_layers, e, x_), ("layers", "embed", None), jnp.float32)
+    if cfg.router_type == "sigmoid":
+        p["router_bias"] = jnp.zeros((n_layers, x_), jnp.float32)
+        a["router_bias"] = ("layers", None)
+    p["wg"], a["wg"] = init_dense(ks[1], (n_layers, x_, e, f), ("layers", "experts", "embed", "moe_mlp"), dt)
+    p["wu"], a["wu"] = init_dense(ks[2], (n_layers, x_, e, f), ("layers", "experts", "embed", "moe_mlp"), dt)
+    p["wd"], a["wd"] = init_dense(ks[3], (n_layers, x_, f, e), ("layers", "experts", "moe_mlp", "embed"), dt)
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["ws_g"], a["ws_g"] = init_dense(ks[4], (n_layers, e, fs), ("layers", "embed", "mlp"), dt)
+        p["ws_u"], a["ws_u"] = init_dense(ks[5], (n_layers, e, fs), ("layers", "embed", "mlp"), dt)
+        p["ws_d"], a["ws_d"] = init_dense(ks[6], (n_layers, fs, e), ("layers", "mlp", "embed"), dt)
+    return p, a
+
+
+def _route(logits: jax.Array, p: dict, cfg: ArchConfig):
+    """logits (T, X) fp32 -> (gates (T,k) f32, idx (T,k) i32)."""
+    k = cfg.top_k
+    if cfg.router_type == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + p["router_bias"]
+        _, idx = jax.lax.top_k(sel, k)
+        g = jnp.take_along_axis(scores, idx, axis=-1)
+        gates = g / jnp.maximum(jnp.sum(g, axis=-1, keepdims=True), 1e-9)
+    else:
+        _, idx = jax.lax.top_k(logits, k)
+        g = jnp.take_along_axis(logits, idx, axis=-1)
+        gates = jax.nn.softmax(g, axis=-1)
+    return gates.astype(jnp.float32), idx.astype(jnp.int32)
+
+
+def _moe_group(xg: jax.Array, p: dict, cfg: ArchConfig, capacity: int):
+    """Route one token group. xg: (T_g, E) -> (T_g, E)."""
+    t_g, e = xg.shape
+    x_, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("te,ex->tx", xg.astype(jnp.float32), p["w_router"])
+    gates, idx = _route(logits, p, cfg)
+
+    n = t_g * k
+    eid = idx.reshape(n)
+    tid = jnp.repeat(jnp.arange(t_g, dtype=jnp.int32), k)
+    gat = gates.reshape(n)
+    order = jnp.argsort(eid, stable=True)
+    eid_s, tid_s, gat_s = eid[order], tid[order], gat[order]
+    starts = jnp.searchsorted(eid_s, jnp.arange(x_, dtype=eid_s.dtype), side="left")
+    pos = jnp.arange(n, dtype=jnp.int32) - starts[eid_s].astype(jnp.int32)
+    keep = pos < capacity
+    posc = jnp.minimum(pos, capacity - 1)
+
+    buf = jnp.zeros((x_, capacity, e), xg.dtype)
+    vals_in = xg[tid_s] * keep[:, None].astype(xg.dtype)
+    buf = buf.at[eid_s, posc].add(vals_in)
+    from repro.distributed.ctx import constrain
+
+    # under vmap this constrains the (G, X, C, E) buffer: shard X like the
+    # expert weights so the grouped GEMM is expert-local (tokens a2a, not
+    # 7.5 GB/layer weight all-gathers — EXPERIMENTS.md §Perf deepseek)
+    buf = constrain(buf, "moe_buf")
+
+    hg = jnp.einsum("xce,xef->xcf", buf, p["wg"])
+    hu = jnp.einsum("xce,xef->xcf", buf, p["wu"])
+    out_buf = jnp.einsum("xcf,xfe->xce", jax.nn.silu(hg) * hu, p["wd"])
+
+    w = (gat_s * keep.astype(jnp.float32)).astype(xg.dtype)
+    vals_out = out_buf[eid_s, posc] * w[:, None]
+    out = jnp.zeros((t_g, e), xg.dtype).at[tid_s].add(vals_out)
+    return out
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: ArchConfig, *, n_groups: int = 0) -> jax.Array:
+    """x: (B, S, E). Groups default to B (shard-local routing when batch is
+    data-sharded); capacity = T_g·k·cf / X per group."""
+    b, s, e = x.shape
+    g = n_groups or b
+    t = b * s
+    assert t % g == 0, (t, g)
+    t_g = t // g
+    cap = max(1, int(t_g * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    xg = x.reshape(g, t_g, e)
+    out = jax.vmap(lambda xx: _moe_group(xx, p, cfg, cap))(xg)
+    out = out.reshape(b, s, e)
+    from repro.distributed.ctx import constrain
+
+    out = constrain(out, "resid")
+    if cfg.n_shared_experts:
+        out = out + swiglu(x, p["ws_g"], p["ws_u"], p["ws_d"])
+    return out

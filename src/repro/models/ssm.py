@@ -1,0 +1,283 @@
+"""Recurrent mixers: chunkwise linear recurrence, SSD (Mamba-2 style) branch,
+mLSTM (xLSTM), and a reference sLSTM.
+
+Hardware adaptation (DESIGN.md §2/§4): Mamba-1's per-channel selective scan
+has no efficient TPU lowering (it streams state through HBM); the SSD
+reformulation (Mamba-2, arXiv:2405.21060) factors the recurrence into
+chunk-local attention-like matmuls (MXU) plus a tiny cross-chunk state scan —
+that is what we implement, for both the Hymba SSM branch and the xLSTM mLSTM
+(whose matrix memory has the same algebraic shape). Gates are sigmoid (the
+GLA/RetNet-stable variant); xLSTM's exponential-gate stabiliser is noted as a
+simplification in DESIGN.md.
+
+Core primitive — state S_t ∈ R^{N×P} per (batch, head):
+
+    S_t = a_t · S_{t-1} + k_t ⊗ v_t          a_t ∈ (0, 1]
+    y_t = S_tᵀ q_t                            q_t, k_t ∈ R^N, v_t ∈ R^P
+
+Chunked evaluation over chunks of Q tokens:
+    intra:  y_i += Σ_{j≤i} (q_i·k_j) · exp(La_i − La_j) · v_j   (Q×Q matmul)
+    inter:  y_i += exp(La_i) · S_prevᵀ q_i
+    carry:  S_new = exp(La_Q) S_prev + Σ_j exp(La_Q − La_j) k_j ⊗ v_j
+with La the inclusive cumsum of log a within the chunk.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import init_dense, pdtype, rmsnorm
+
+
+def chunked_linear_recurrence(
+    q: jax.Array,  # (B, S, H, N)
+    k: jax.Array,  # (B, S, H, N)
+    v: jax.Array,  # (B, S, H, P)
+    log_a: jax.Array,  # (B, S, H) log-decay, <= 0
+    *,
+    chunk: int,
+    initial_state: jax.Array | None = None,  # (B, H, N, P)
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P) fp32, final_state (B,H,N,P) fp32)."""
+    b, s, h, n = q.shape
+    p = v.shape[-1]
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    la = log_a.astype(jnp.float32)
+    cq = min(chunk, s)
+    nc = -(-s // cq)
+    pad = nc * cq - s
+    if pad:
+        qf = jnp.pad(qf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))  # log a = 0 -> a = 1
+    resh = lambda t: t.reshape(b, nc, cq, *t.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc, lac = resh(qf), resh(kf), resh(vf), resh(la)
+
+    s0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((b, h, n, p), jnp.float32)
+    )
+
+    tri = jnp.tril(jnp.ones((cq, cq), bool))
+
+    def body(state, xs):
+        qq, kk, vv, aa = xs  # (B,Q,H,*)
+        cum = jnp.cumsum(aa, axis=1)  # (B,Q,H) inclusive
+        tot = cum[:, -1]  # (B,H)
+        # intra-chunk
+        sc = jnp.einsum("bihn,bjhn->bhij", qq, kk)
+        dec = cum[:, :, None, :] - cum[:, None, :, :]  # La_i - La_j, (B,i,j,H)
+        sc = sc * jnp.exp(dec.transpose(0, 3, 1, 2))
+        sc = jnp.where(tri[None, None], sc, 0.0)
+        y = jnp.einsum("bhij,bjhp->bihp", sc, vv)
+        # inter-chunk
+        y = y + jnp.einsum("bihn,bhnp->bihp", qq * jnp.exp(cum)[..., None], state)
+        # carry
+        kw = kk * jnp.exp(tot[:, None] - cum)[..., None]  # (B,Q,H,N)
+        state = state * jnp.exp(tot)[..., None, None] + jnp.einsum(
+            "bjhn,bjhp->bhnp", kw, vv
+        )
+        return state, y
+
+    # checkpoint: bwd re-forms each chunk's (B,H,Q,Q) decay/score tiles
+    body = jax.checkpoint(body, prevent_cse=False)
+    final, yc = jax.lax.scan(body, s0, (qc, kc, vc, lac))
+    y = yc.swapaxes(0, 1).reshape(b, nc * cq, h, p)[:, :s]
+    return y, final
+
+
+def linear_recurrence_step(
+    q: jax.Array,  # (B, H, N)
+    k: jax.Array,
+    v: jax.Array,  # (B, H, P)
+    a: jax.Array,  # (B, H) decay in (0,1]
+    state: jax.Array,  # (B, H, N, P)
+) -> tuple[jax.Array, jax.Array]:
+    """Single decode step. Returns (y (B,H,P), new_state)."""
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    state = state * a[..., None, None].astype(jnp.float32) + kf[..., :, None] * vf[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", qf, state)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# SSD branch (hymba's mamba-style heads)
+# ---------------------------------------------------------------------------
+
+
+def init_ssd(key, cfg: ArchConfig, n_layers: int):
+    e, h = cfg.d_model, cfg.n_heads
+    dh, n = cfg.resolved_head_dim, cfg.ssm_state
+    dt_ = pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["wx"], a["wx"] = init_dense(ks[0], (n_layers, e, h, dh), ("layers", "embed", "heads", "head_dim"), dt_)
+    p["wB"], a["wB"] = init_dense(ks[1], (n_layers, e, h, n), ("layers", "embed", "heads", None), dt_)
+    p["wC"], a["wC"] = init_dense(ks[2], (n_layers, e, h, n), ("layers", "embed", "heads", None), dt_)
+    p["w_dt"], a["w_dt"] = init_dense(ks[3], (n_layers, e, h), ("layers", "embed", "heads"), dt_)
+    p["dt_bias"] = jnp.zeros((n_layers, h), jnp.float32); a["dt_bias"] = ("layers", "heads")
+    p["A_log"] = jnp.zeros((n_layers, h), jnp.float32); a["A_log"] = ("layers", "heads")
+    p["D"] = jnp.ones((n_layers, h), jnp.float32); a["D"] = ("layers", "heads")
+    p["wo"], a["wo"] = init_dense(ks[4], (n_layers, h, dh, e), ("layers", "heads", "head_dim", "embed"), dt_)
+    return p, a
+
+
+def _ssd_gates(p, x):
+    dt = jax.nn.softplus(
+        jnp.einsum("bse,eh->bsh", x.astype(jnp.float32), p["w_dt"].astype(jnp.float32))
+        + p["dt_bias"]
+    )  # (B,S,H) > 0
+    log_a = -dt * jnp.exp(p["A_log"])  # <= 0
+    return dt, log_a
+
+
+def ssd_train(p, x, cfg: ArchConfig):
+    """SSD branch forward. x: (B,S,E) -> (B,S,E)."""
+    xs = jnp.einsum("bse,ehd->bshd", x, p["wx"])  # v
+    bb = jnp.einsum("bse,ehn->bshn", x, p["wB"])  # k
+    cc = jnp.einsum("bse,ehn->bshn", x, p["wC"])  # q
+    dt, log_a = _ssd_gates(p, x)
+    v = xs * dt[..., None].astype(xs.dtype)  # fold Δ into v
+    y, _ = chunked_linear_recurrence(cc, bb, v, log_a, chunk=cfg.chunk)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    return jnp.einsum("bshd,hde->bse", y.astype(x.dtype), p["wo"])
+
+
+def ssd_init_state(cfg: ArchConfig, batch: int):
+    return jnp.zeros(
+        (batch, cfg.n_heads, cfg.ssm_state, cfg.resolved_head_dim), jnp.float32
+    )
+
+
+def ssd_decode(p, x, state, cfg: ArchConfig):
+    """x: (B,1,E); state (B,H,N,P) -> (y (B,1,E), new_state)."""
+    xs = jnp.einsum("bse,ehd->bshd", x, p["wx"])[:, 0]
+    bb = jnp.einsum("bse,ehn->bshn", x, p["wB"])[:, 0]
+    cc = jnp.einsum("bse,ehn->bshn", x, p["wC"])[:, 0]
+    dt, log_a = _ssd_gates(p, x)
+    v = xs * dt[:, 0, :, None].astype(xs.dtype)
+    y, state = linear_recurrence_step(cc, bb, v, jnp.exp(log_a[:, 0]), state)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    return jnp.einsum("bhd,hde->be", y.astype(x.dtype), p["wo"])[:, None], state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM) block — includes its own projections; no separate FFN
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ArchConfig, n_layers: int):
+    e, h = cfg.d_model, cfg.n_heads
+    dh = cfg.resolved_head_dim
+    dt_ = pdtype(cfg)
+    ks = jax.random.split(key, 8)
+    p, a = {}, {}
+    for i, nm in enumerate(("wq", "wk", "wv")):
+        p[nm], a[nm] = init_dense(ks[i], (n_layers, e, h, dh), ("layers", "embed", "heads", "head_dim"), dt_)
+    p["w_i"], a["w_i"] = init_dense(ks[3], (n_layers, e, h), ("layers", "embed", "heads"), dt_)
+    p["w_f"], a["w_f"] = init_dense(ks[4], (n_layers, e, h), ("layers", "embed", "heads"), dt_)
+    p["f_bias"] = jnp.full((n_layers, h), 4.0, jnp.float32); a["f_bias"] = ("layers", "heads")
+    p["w_og"], a["w_og"] = init_dense(ks[5], (n_layers, e, h, dh), ("layers", "embed", "heads", "head_dim"), dt_)
+    p["ln_out"] = jnp.ones((n_layers, h * dh), dt_); a["ln_out"] = ("layers", None)
+    p["wo"], a["wo"] = init_dense(ks[6], (n_layers, h, dh, e), ("layers", "heads", "head_dim", "embed"), dt_)
+    return p, a
+
+
+def _mlstm_qkvg(p, x, cfg: ArchConfig):
+    dh = cfg.resolved_head_dim
+    q = jnp.einsum("bse,ehd->bshd", x, p["wq"]) / np.sqrt(dh)
+    k = jnp.einsum("bse,ehd->bshd", x, p["wk"]) / np.sqrt(dh)
+    v = jnp.einsum("bse,ehd->bshd", x, p["wv"])
+    xf = x.astype(jnp.float32)
+    i_g = jax.nn.sigmoid(jnp.einsum("bse,eh->bsh", xf, p["w_i"].astype(jnp.float32)))
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bse,eh->bsh", xf, p["w_f"].astype(jnp.float32)) + p["f_bias"]
+    )
+    og = jax.nn.sigmoid(jnp.einsum("bse,ehd->bshd", x, p["w_og"]).astype(jnp.float32))
+    return q, k, v, i_g, log_f, og
+
+
+def _mlstm_out(p, y, og, x_dtype, cfg: ArchConfig, eps: float):
+    y = y * og  # output gate
+    flat = y.reshape(*y.shape[:-2], cfg.n_heads * cfg.resolved_head_dim)
+    flat = rmsnorm(flat.astype(x_dtype), p["ln_out"], eps)
+    y = flat.reshape(y.shape).astype(x_dtype)
+    return jnp.einsum("...hd,hde->...e", y, p["wo"])
+
+
+def mlstm_train(p, x, cfg: ArchConfig):
+    """x: (B,S,E) -> (B,S,E). Matrix memory C ∈ R^{N×P} with N=P=head_dim,
+    normaliser tracked as an extra v-column (h = Cq / max(|n·q|, 1))."""
+    b, s, e = x.shape
+    q, k, v, i_g, log_f, og = _mlstm_qkvg(p, x, cfg)
+    k_eff = k.astype(jnp.float32) * i_g[..., None]
+    v_aug = jnp.concatenate(
+        [v.astype(jnp.float32), jnp.ones(v.shape[:-1] + (1,), jnp.float32)], axis=-1
+    )
+    y_aug, _ = chunked_linear_recurrence(q, k_eff, v_aug, log_f, chunk=cfg.chunk)
+    y, norm = y_aug[..., :-1], y_aug[..., -1:]
+    y = y / jnp.maximum(jnp.abs(norm), 1.0)
+    return _mlstm_out(p, y, og, x.dtype, cfg, cfg.norm_eps)
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int):
+    dh = cfg.resolved_head_dim
+    return jnp.zeros((batch, cfg.n_heads, dh, dh + 1), jnp.float32)
+
+
+def mlstm_decode(p, x, state, cfg: ArchConfig):
+    q, k, v, i_g, log_f, og = _mlstm_qkvg(p, x, cfg)
+    k_eff = (k.astype(jnp.float32) * i_g[..., None])[:, 0]
+    v_aug = jnp.concatenate(
+        [v[:, 0].astype(jnp.float32), jnp.ones(v.shape[:1] + v.shape[2:3] + (1,), jnp.float32)],
+        axis=-1,
+    )
+    y_aug, state = linear_recurrence_step(q[:, 0], k_eff, v_aug, jnp.exp(log_f[:, 0]), state)
+    y, norm = y_aug[..., :-1], y_aug[..., -1:]
+    y = y / jnp.maximum(jnp.abs(norm), 1.0)
+    out = _mlstm_out(p, y, og[:, 0], x.dtype, cfg, cfg.norm_eps)
+    return out[:, None], state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — reference implementation (unit-tested; not used by the 1.3b config)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, d_model: int, d_hidden: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "w_in": jax.random.normal(ks[0], (d_model, 4 * d_hidden), jnp.float32) * (d_model ** -0.5),
+        "r": jax.random.normal(ks[1], (d_hidden, 4 * d_hidden), jnp.float32) * (d_hidden ** -0.5),
+        "b": jnp.zeros((4 * d_hidden,), jnp.float32),
+    }
+    return jax.tree_util.tree_map(lambda t: t.astype(dtype), p)
+
+
+def slstm_apply(p, x):
+    """Scalar-memory sLSTM with exponential gating + stabiliser (paper eq. set).
+    x: (B,S,E) -> (B,S,Dh). Strictly sequential (scan over time)."""
+    b, s, e = x.shape
+    dh = p["r"].shape[0]
+    zx = jnp.einsum("bse,ef->bsf", x.astype(jnp.float32), p["w_in"].astype(jnp.float32))
+
+    def step(carry, zt):
+        c, n, h, m = carry
+        z = zt + jnp.einsum("bh,hf->bf", h, p["r"].astype(jnp.float32)) + p["b"]
+        zi, zf, zz, zo = jnp.split(z, 4, axis=-1)
+        m_new = jnp.maximum(zf + m, zi)  # stabiliser state
+        i = jnp.exp(zi - m_new)
+        f = jnp.exp(zf + m - m_new)
+        c = f * c + i * jnp.tanh(zz)
+        n = f * n + i
+        h = jax.nn.sigmoid(zo) * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    z0 = jnp.zeros((b, dh), jnp.float32)
+    (_, _, _, _), hs = jax.lax.scan(step, (z0, z0, z0, z0), zx.swapaxes(0, 1))
+    return hs.swapaxes(0, 1)

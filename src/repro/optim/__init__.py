@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state, opt_axes  # noqa: F401
+from repro.optim.schedules import warmup_cosine  # noqa: F401

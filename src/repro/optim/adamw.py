@@ -1,0 +1,91 @@
+"""AdamW with fp32 master weights, ZeRO-shardable moments, global-norm clip.
+
+Params live in the model dtype (bf16); the optimizer holds an fp32 master
+copy plus first/second moments (optionally bf16 — the deepseek-671b memory
+budget needs it, DESIGN.md §5). Moments/master carry the *same logical axes*
+as their params, so ``repro.distributed.sharding.OPT_RULES`` shards them over
+the data axis wherever the param itself is replicated (ZeRO-style): no
+optimizer-state redundancy across data-parallel replicas.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"  # "bfloat16" halves optimizer HBM
+    # (gradient sync already runs at bf16 wire width: params/grads are bf16,
+    # fp32 exists only in the sharded master copy — EXPERIMENTS.md §Perf)
+
+
+def init_opt_state(params: Any, cfg: AdamWConfig) -> dict:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda dt: jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, dt), params)
+    return {
+        "mu": zeros(mdt),
+        "nu": zeros(mdt),
+        "master": jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_axes(param_axes: Any) -> dict:
+    """Logical axes for the optimizer state (mirrors the param axes)."""
+    return {
+        "mu": param_axes,
+        "nu": param_axes,
+        "master": param_axes,
+        "count": (),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    sq = sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)
+    )
+    return jnp.sqrt(sq)
+
+
+def adamw_update(
+    grads: Any, opt_state: dict, params: Any, lr: jax.Array, cfg: AdamWConfig
+) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(g, mu, nu, master):
+        g = g.astype(jnp.float32) * scale
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = mu32 / c1
+        vhat = nu32 / c2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * master
+        new_master = master - lr * step
+        return new_master, mu32.astype(mdt), nu32.astype(mdt)
+
+    flat = jax.tree_util.tree_map(
+        upd, grads, opt_state["mu"], opt_state["nu"], opt_state["master"]
+    )
+    new_master = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree_util.tree_map(
+        lambda m, p: m.astype(p.dtype), new_master, params
+    )
+    new_state = {"mu": new_mu, "nu": new_nu, "master": new_master, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,125 @@
+"""Checkpoint substrate: roundtrip, atomicity (paper Q4), delta (Q3), CRC."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import SaveOptions, load_checkpoint, save_checkpoint
+from repro.checkpoint.atomic import gc_orphans, is_committed, list_committed
+from repro.checkpoint.serializer import load_arrays, load_manifest
+
+
+def tree_eq(a, b):
+    fa = jax.tree_util.tree_leaves(a)
+    fb = jax.tree_util.tree_leaves(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        if hasattr(x, "shape"):
+            np.testing.assert_array_equal(np.asarray(x, np.float64 if np.dtype(x.dtype).kind == "f" else None), np.asarray(y, np.float64 if np.dtype(y.dtype).kind == "f" else None))
+        else:
+            assert x == y
+
+
+@pytest.mark.parametrize(
+    "dtype", ["float32", "bfloat16", "float16", "int32", "uint8", "float64"]
+)
+def test_roundtrip_dtypes(tmp_path, dtype):
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal((17, 9)) * 10).astype(dtype)
+    tree = {"x": x, "meta": 7}
+    save_checkpoint(tmp_path, "c", tree)
+    got, _ = load_checkpoint(tmp_path, "c")
+    np.testing.assert_array_equal(np.asarray(got["x"], np.float64 if np.dtype(dtype).kind == "f" else None), np.asarray(x, np.float64 if np.dtype(dtype).kind == "f" else None))
+    assert got["meta"] == 7
+
+
+def test_roundtrip_structure(tmp_path):
+    tree = {
+        "a": [np.arange(5), (np.ones((2, 3), np.float32), None)],
+        "b": {"c": 1.5, "d": "hello", "e": True, "f": jnp.asarray(2.5)},
+        "scalar0d": np.asarray(3, np.int64),
+    }
+    save_checkpoint(tmp_path, "c", tree, step=9, meta={"k": "v"})
+    got, man = load_checkpoint(tmp_path, "c")
+    assert man.step == 9 and man.meta["k"] == "v"
+    assert isinstance(got["a"], list) and isinstance(got["a"][1], tuple)
+    assert got["b"]["c"] == 1.5 and got["b"]["d"] == "hello" and got["b"]["e"] is True
+    assert float(got["b"]["f"]) == 2.5
+    assert int(got["scalar0d"]) == 3
+
+
+def test_uncommitted_is_invisible(tmp_path):
+    with pytest.raises(Exception):
+        save_checkpoint(tmp_path, "c", {"x": np.ones(4)}, _crash_after_data=True)
+    assert not is_committed(tmp_path / "c")
+    assert list_committed(tmp_path) == []
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(tmp_path, "c")
+    # orphaned staging dir is GC-able
+    removed = gc_orphans(tmp_path)
+    assert len(removed) == 1
+
+
+def test_atomic_overwrite_preserves_previous(tmp_path):
+    """Paper Q4: a crash mid-checkpoint never clobbers the previous CMI."""
+    save_checkpoint(tmp_path, "c", {"x": np.zeros(4)}, step=1)
+    with pytest.raises(Exception):
+        save_checkpoint(tmp_path, "c", {"x": np.ones(4)}, step=2, _crash_after_data=True)
+    got, man = load_checkpoint(tmp_path, "c")
+    assert man.step == 1
+    np.testing.assert_array_equal(got["x"], np.zeros(4))
+
+
+def test_crc_detects_corruption(tmp_path):
+    save_checkpoint(tmp_path, "c", {"x": np.arange(100, dtype=np.float32)})
+    data = tmp_path / "c" / "data-0.bin"
+    raw = bytearray(data.read_bytes())
+    raw[13] ^= 0xFF
+    data.write_bytes(bytes(raw))
+    with pytest.raises(IOError, match="CRC"):
+        load_checkpoint(tmp_path, "c")
+    got, _ = load_checkpoint(tmp_path, "c", validate_crc=False)  # escape hatch
+    assert got["x"].shape == (100,)
+
+
+def test_delta_chain_and_gc_refs(tmp_path):
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((64, 8)).astype(np.float32)
+    opts = lambda parent: SaveOptions(chunk_bytes=256, parent=parent)
+    save_checkpoint(tmp_path, "c0", {"w": w}, options=opts(None))
+    w1 = w.copy(); w1[5] += 1
+    m1 = save_checkpoint(tmp_path, "c1", {"w": w1}, options=opts("c0"))
+    assert m1.extra["stats"]["written_bytes"] < w.nbytes / 4
+    w2 = w1.copy(); w2[50] -= 2
+    m2 = save_checkpoint(tmp_path, "c2", {"w": w2}, options=opts("c1"))
+    # refs resolve flat (no chain walking at restore)
+    man = load_manifest(tmp_path, "c2")
+    owners = {c.ref for c in man.arrays["w"].chunks}
+    assert "c0" in owners and None in owners
+    got, _ = load_checkpoint(tmp_path, "c2")
+    np.testing.assert_array_equal(got["w"], w2)
+
+
+def test_changed_hint_skips_hashing(tmp_path):
+    w = np.zeros((32, 8), np.float32)
+    save_checkpoint(tmp_path, "c0", {"w": w}, options=SaveOptions(chunk_bytes=256))
+    w1 = w.copy(); w1[0] += 1  # block 0 changed
+    nchunks = len(load_manifest(tmp_path, "c0").arrays["w"].chunks)
+    hint = np.zeros(nchunks, bool); hint[0] = True
+    m = save_checkpoint(
+        tmp_path, "c1", {"w": w1},
+        options=SaveOptions(chunk_bytes=256, parent="c0", changed_hint={"w": hint}),
+    )
+    assert m.extra["stats"]["ref_chunks"] == nchunks - 1
+    got, _ = load_checkpoint(tmp_path, "c1")
+    np.testing.assert_array_equal(got["w"], w1)
+
+
+def test_partial_restore(tmp_path):
+    save_checkpoint(tmp_path, "c", {"a": np.ones(8), "b": np.zeros(4)})
+    out = load_arrays(tmp_path, "c", paths=["a"])
+    assert set(out) == {"a"}

@@ -1,0 +1,123 @@
+"""NavP core: DHP hop/publish/restart, itineraries, plugins, async publish."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DHP, NBS, JobStore
+from repro.core.delta import DeltaPolicy
+from repro.core.itinerary import Itinerary, MobilePipeline, Stage
+from repro.core.jobstore import STATUS_CKPT
+
+
+@pytest.fixture
+def cluster(tmp_path):
+    nbs = NBS(tmp_path / "s3")
+    nbs.add_node("A", mesh=None)
+    nbs.add_node("B", mesh=jax.make_mesh((1,), ("data",)))
+    store = JobStore(tmp_path / "jobs")
+    return nbs, store
+
+
+def test_publish_restart_roundtrip(cluster):
+    nbs, store = cluster
+    dhp = DHP(nbs, "A", store)
+    job = store.create_job({})
+    state = {"params": {"w": jnp.arange(16.0)}, "step": 3}
+    dhp.publish(job.job_id, STATUS_CKPT, state, step=3)
+    got, step = dhp.restart(job.job_id, node="B")
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(got["params"]["w"]), np.arange(16.0))
+
+
+def test_hop_store_and_live(cluster):
+    nbs, store = cluster
+    dhp = DHP(nbs, "A", store)
+    state = {"x": jnp.ones((4, 4))}
+    s2 = dhp.hop(state, "B", via="store")
+    assert dhp.node == "B"
+    s3 = dhp.hop(s2, "A", via="store")  # A has no mesh -> store roundtrip
+    np.testing.assert_array_equal(np.asarray(s3["x"]), np.ones((4, 4)))
+
+
+def test_hop_to_reclaimed_node_raises(cluster):
+    nbs, store = cluster
+    dhp = DHP(nbs, "A", store)
+    nbs.remove_node("B")
+    with pytest.raises(KeyError, match="reclaimed"):
+        dhp.hop({"x": jnp.ones(2)}, "B")
+
+
+def test_plugin_event_order(cluster):
+    nbs, store = cluster
+    events = []
+    nbs.plugins.subscribe("on_checkpoint", lambda **kw: events.append(("ckpt", kw["cmi"])))
+    nbs.plugins.subscribe("on_publish", lambda **kw: events.append(("pub", kw["status"])))
+    nbs.plugins.subscribe("on_restart", lambda **kw: events.append(("restart", kw["step"])))
+    dhp = DHP(nbs, "A", store)
+    job = store.create_job({})
+    dhp.publish(job.job_id, STATUS_CKPT, {"x": jnp.ones(2)}, step=1)
+    dhp.restart(job.job_id)
+    kinds = [e[0] for e in events]
+    assert kinds == ["ckpt", "pub", "restart"]
+
+
+def test_async_publish_flush(cluster):
+    nbs, store = cluster
+    dhp = DHP(nbs, "A", store, async_publish=True)
+    job = store.create_job({})
+    for i in range(3):
+        dhp.publish(job.job_id, STATUS_CKPT, {"w": jnp.full((256,), float(i))}, step=i)
+    dhp.flush()
+    got, step = dhp.restart(job.job_id)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.full((256,), 2.0))
+
+
+def test_delta_publish_chain(cluster):
+    nbs, store = cluster
+    dhp = DHP(nbs, "A", store, delta=DeltaPolicy(full_every=3), chunk_bytes=64)
+    job = store.create_job({})
+    w = jnp.zeros((64,))
+    for i in range(5):
+        w = w.at[i].set(1.0)
+        dhp.publish(job.job_id, STATUS_CKPT, {"w": w}, step=i)
+    got, step = dhp.restart(job.job_id)
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(got["w"])[:5], np.ones(5))
+
+
+def test_itinerary_fig8_and_resume(cluster):
+    """Figure 8: hop; read; hop; compute; hop; write — with mid-way restart."""
+    nbs, store = cluster
+    dhp = DHP(nbs, "A", store)
+    job = store.create_job({})
+    it = Itinerary(dhp, job.job_id)
+    stages = [
+        Stage("B", lambda s: {**s, "x": s["x"] + 1}, "read", publish=True),
+        Stage("A", lambda s: {**s, "x": s["x"] * 2}, "compute", publish=True),
+        Stage("B", lambda s: {**s, "x": s["x"] - 3}, "write"),
+    ]
+    out = it.run({"x": jnp.asarray(10.0)}, stages)
+    assert float(out["x"]) == 19.0
+    assert [n for n, _ in it.trace] == ["read", "compute", "write"]
+    # resume: restart from the last published stage (compute done -> only write)
+    dhp2 = DHP(nbs, "A", store)
+    it2 = Itinerary(dhp2, job.job_id)
+    out2 = it2.resume(stages)
+    assert float(out2["x"]) == 19.0
+    assert [n for n, _ in it2.trace] == ["write"]
+
+
+def test_mobile_pipeline_schedule(cluster):
+    nbs, store = cluster
+    dhp = DHP(nbs, "A", store)
+    mp = MobilePipeline(dhp, [Stage("A", lambda s: s + 1, "r"), Stage("B", lambda s: s * 2, "c")])
+    res = mp.run([jnp.asarray(float(i)) for i in range(4)])
+    assert [float(r) for r in res] == [2.0, 4.0, 6.0, 8.0]
+    # steady-state ticks run two items at once (software pipelining)
+    widths = [len(t) for t in mp.tick_log]
+    assert max(widths) == 2

@@ -1,0 +1,104 @@
+"""Sharding rules: divisibility fallback, axis-conflict, ZeRO, mesh remap."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint.format import ShardingRecord
+from repro.core.cmi import mesh_resharding_resolver
+from repro.distributed.sharding import (
+    CACHE_RULES,
+    DEFAULT_RULES,
+    OPT_RULES,
+    data_pspec,
+    spec_for,
+)
+
+
+@pytest.fixture(scope="module")
+def mesh22():
+    # AbstractMesh: the sharding engine is duck-typed over mesh.shape, so
+    # rule tests need no physical devices (the pytest process has 1)
+    return jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+
+
+def test_heads_divisibility_fallback(mesh22):
+    # 56 heads on a 2-way model axis shard (56 % 2 == 0); 7 heads fall back
+    s1 = spec_for(("embed", "heads", "head_dim"), (64, 56, 128), mesh22, DEFAULT_RULES)
+    assert s1 == P(None, "model", None)
+    s2 = spec_for(("embed", "heads", "head_dim"), (64, 7, 128), mesh22, DEFAULT_RULES)
+    assert s2 == P(None, None, None)
+
+
+def test_experts_prefer_full_mesh(mesh22):
+    s = spec_for(("experts", "embed", "moe_mlp"), (8, 64, 32), mesh22, DEFAULT_RULES)
+    assert s == P(("data", "model"), None, None)
+    # 2 experts can't take data*model=4 -> falls to model only
+    s2 = spec_for(("experts", "embed", "moe_mlp"), (2, 64, 32), mesh22, DEFAULT_RULES)
+    assert s2 == P("model", None, None)
+
+
+def test_axis_conflict_not_reused(mesh22):
+    # experts consume both axes; embed (OPT_RULES: data) must not reuse them
+    s = spec_for(("experts", "embed", "moe_mlp"), (8, 64, 32), mesh22, OPT_RULES)
+    assert s == P(("data", "model"), None, None)
+
+
+def test_zero_style_opt_sharding(mesh22):
+    p = spec_for(("embed", "mlp"), (64, 128), mesh22, DEFAULT_RULES)
+    o = spec_for(("embed", "mlp"), (64, 128), mesh22, OPT_RULES)
+    assert p == P(None, "model")
+    assert o == P("data", "model")  # ZeRO: replicated-for-params dim shards
+
+
+def test_cache_rules_seq_sharded(mesh22):
+    s = spec_for(("layers", "batch", "seq", "kv_heads", "head_dim"), (4, 8, 64, 8, 128), mesh22, CACHE_RULES)
+    assert s == P(None, "data", "model", None, None)
+
+
+def test_data_pspec_batch1_fallback(mesh22):
+    assert data_pspec(mesh22, 2, 8) == P("data", None)
+    assert data_pspec(mesh22, 2, 1) == P(None, None)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 64), min_size=1, max_size=4),
+    names=st.lists(
+        st.sampled_from(["embed", "heads", "mlp", "experts", "vocab", None]),
+        min_size=1, max_size=4,
+    ),
+)
+def test_spec_for_never_overshards(mesh22, dims, names):
+    """Property: every sharded dim divides; no mesh axis used twice."""
+    names = names[: len(dims)]
+    dims = dims[: len(names)]
+    spec = spec_for(tuple(names), tuple(dims), mesh22, DEFAULT_RULES)
+    sizes = {"data": 2, "model": 2}
+    used = []
+    for dim, entry in zip(dims, spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        factor = int(np.prod([sizes[a] for a in axes]))
+        assert dim % factor == 0
+        used.extend(axes)
+    assert len(used) == len(set(used))
+
+
+def test_mesh_remap_resolver(mesh22):
+    """A spec saved on a 4x4 mesh remaps onto 2x2 (elastic restore)."""
+    rec = ShardingRecord(mesh_shape=[4, 4], mesh_axes=["data", "model"], pspec=["model", None])
+    r = mesh_resharding_resolver(mesh22)
+    sh = r("w", (64, 32), np.float32, rec)
+    assert sh.spec == P("model", None)
+    # axis missing on the new mesh -> replicated
+    rec2 = ShardingRecord(mesh_shape=[2, 2, 2], mesh_axes=["pod", "data", "model"], pspec=[["pod", "data"], None])
+    sh2 = r("w", (64, 32), np.float32, rec2)
+    assert sh2.spec == P("data", None)
+    # non-dividing dim -> replicated
+    rec3 = ShardingRecord(mesh_shape=[4], mesh_axes=["model"], pspec=["model"])
+    sh3 = r("w", (7,), np.float32, rec3)
+    assert sh3.spec == P(None)
