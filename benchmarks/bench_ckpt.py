@@ -7,10 +7,17 @@ counterpart: save/restore wall time and bytes for a training-state pytree
 under (a) full snapshot, (b) replica-deduped sharded save, (c) delta CMI
 with 1% mutation, (d) delta driven by the on-device changed-block kernel,
 (e) async publish (device→host snapshot only on the critical path).
+
+``writer_sweep`` measures the parallel sharded I/O engine: save and restore
+GB/s as a function of ``SaveOptions.writers`` / ``io_threads``
+(1 = sequential seed behavior). Run standalone to record ``BENCH_ckpt.json``::
+
+    PYTHONPATH=src python -m benchmarks.bench_ckpt --sweep-mb 256 --out BENCH_ckpt.json
 """
 
 from __future__ import annotations
 
+import json
 import shutil
 import tempfile
 import time
@@ -19,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.serializer import SaveOptions, save_checkpoint
+from repro.checkpoint.serializer import SaveOptions, load_checkpoint, save_checkpoint
 from repro.core.cmi import restore_cmi, save_cmi, snapshot_to_host
 from repro.core.delta import device_changed_hints
 from repro.utils import tree_nbytes
@@ -113,4 +120,110 @@ def run(n_mb: int = 64) -> list[tuple[str, float, str]]:
         )
     finally:
         shutil.rmtree(root, ignore_errors=True)
+    rows.extend(writer_sweep(n_mb=max(32, n_mb), writer_counts=(1, 0))[0])
     return rows
+
+
+def writer_sweep(
+    n_mb: int = 256,
+    chunk_mb: int = 1,
+    writer_counts: tuple[int, ...] = (1, 2, 4, 8),
+    repeats: int = 1,
+) -> tuple[list[tuple[str, float, str]], dict]:
+    """Save/restore throughput vs writer count for the striped I/O engine.
+
+    ``writer_counts`` entries are SaveOptions.writers values (0 = auto =
+    min(8, cpu_count)); restore uses ``io_threads`` equal to the same count.
+    Returns (csv rows, json-able result dict). Save and restore throughputs
+    are best-of-``repeats`` to damp page-cache/shared-host noise.
+
+    The state is snapshotted to host before timing: the sweep measures the
+    serializer's I/O engine the way async publish drives it (device→host
+    copy off the critical path), not the device transfer.
+    """
+    import os
+
+    state = jax.tree_util.tree_map(
+        lambda x: np.asarray(x) if hasattr(x, "shape") else x, make_state(n_mb)
+    )
+    nbytes = tree_nbytes(state)
+    results: dict = {
+        "state_bytes": nbytes,
+        "chunk_bytes": chunk_mb * MB,
+        "repeats": repeats,
+        "env": {"cpu_count": os.cpu_count(), "tmpdir": tempfile.gettempdir()},
+        "writers": {},
+    }
+    rows: list[tuple[str, float, str]] = []
+    # Interleave writer counts within each repeat so every count samples the
+    # same I/O windows (shared hosts drift between fast/slow regimes).
+    best: dict[int, dict[str, float]] = {
+        w: {"save": float("inf"), "restore": float("inf")} for w in writer_counts
+    }
+    for _ in range(max(1, repeats)):
+        for w in writer_counts:
+            opts = SaveOptions(chunk_bytes=chunk_mb * MB, writers=w)
+            root = tempfile.mkdtemp(prefix=f"bench-ckpt-w{w}-")
+            try:
+                t0 = time.perf_counter()
+                save_checkpoint(root, "c", state, options=opts)
+                best[w]["save"] = min(best[w]["save"], time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                load_checkpoint(root, "c", io_threads=w)  # 0 = auto, like writers
+                best[w]["restore"] = min(best[w]["restore"], time.perf_counter() - t0)
+            finally:
+                shutil.rmtree(root, ignore_errors=True)
+    for w in writer_counts:
+        label = str(w) if w > 0 else f"auto({SaveOptions(writers=w).resolved_writers()})"
+        t_save, t_restore = best[w]["save"], best[w]["restore"]
+        save_gbps = nbytes / t_save / 1e9
+        restore_gbps = nbytes / t_restore / 1e9
+        results["writers"][label] = {
+            "save_s": t_save,
+            "save_gbps": save_gbps,
+            "restore_s": t_restore,
+            "restore_gbps": restore_gbps,
+        }
+        rows.append(
+            (f"ckpt_sweep_w{label}", t_save * 1e6,
+             f"save {save_gbps:.2f}GB/s restore {restore_gbps:.2f}GB/s")
+        )
+    base = results["writers"].get("1")
+    if base is not None:
+        for label, r in results["writers"].items():
+            r["save_speedup_vs_w1"] = r["save_gbps"] / base["save_gbps"]
+            r["restore_speedup_vs_w1"] = r["restore_gbps"] / base["restore_gbps"]
+    return rows, results
+
+
+def main(argv: list[str] | None = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description="checkpoint writer-count sweep")
+    ap.add_argument("--sweep-mb", type=int, default=256, help="state size (MB)")
+    ap.add_argument("--chunk-mb", type=int, default=1, help="chunk size (MiB)")
+    ap.add_argument(
+        "--writers", type=lambda s: tuple(int(x) for x in s.split(",")),
+        default=(1, 2, 4, 8), help="comma-separated writer counts (0 = auto)",
+    )
+    ap.add_argument("--repeats", type=int, default=2, help="best-of-N timing")
+    ap.add_argument("--out", default=None, help="write JSON results here")
+    args = ap.parse_args(argv)
+
+    rows, results = writer_sweep(
+        args.sweep_mb, args.chunk_mb, args.writers, repeats=args.repeats
+    )
+    print(f"{'writers':>10} {'save GB/s':>10} {'restore GB/s':>13} {'save x':>7} {'restore x':>10}")
+    for label, r in results["writers"].items():
+        print(
+            f"{label:>10} {r['save_gbps']:>10.3f} {r['restore_gbps']:>13.3f} "
+            f"{r.get('save_speedup_vs_w1', 1.0):>7.2f} {r.get('restore_speedup_vs_w1', 1.0):>10.2f}"
+        )
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,9 @@ scalars), never the runtime environment. Layout of one CMI directory::
 
     <name>/
       manifest.json   # structure skeleton + per-array chunk table + shardings
-      data-0.bin      # concatenated raw little-endian chunks
+      data-0.bin      # raw little-endian chunks, striped round-robin across
+      ...             # data-0.bin … data-{W-1}.bin (SaveOptions.writers; a
+      data-{W-1}.bin  # writers=1 save produces the legacy single data-0.bin)
       COMMIT          # written last inside the staging dir; the directory is
                       # renamed into place only when fully consistent (Q4)
 
@@ -15,11 +17,16 @@ Key properties (each tested):
   * replica dedup — every distinct shard of a sharded ``jax.Array`` is written
     exactly once, regardless of how many devices hold a copy;
   * atomic commit — a crash at any point leaves either the old CMI or the new
-    CMI, never a torn one (paper §Q4);
+    CMI, never a torn one (paper §Q4); every striped shard file is fsync'd
+    before COMMIT;
+  * parallel I/O — saves pipeline per-chunk hashing against striped writer
+    threads; restores coalesce adjacent byte ranges per file and execute them
+    on a thread pool (see ``docs/checkpoint_format.md``);
   * range-read restore — a restoring host materialising shard S reads only the
     chunks overlapping S ("carry only the data needed", paper §1 opt. 1);
-  * delta references — a chunk entry may point into a *parent* CMI's data file,
-    enabling incremental CMIs (paper §Q3) without copying unchanged blocks.
+  * delta references — a chunk entry may point into any of a *parent* CMI's
+    data files, enabling incremental CMIs (paper §Q3) without copying
+    unchanged blocks.
 """
 
 from repro.checkpoint.format import (  # noqa: F401
@@ -36,6 +43,7 @@ from repro.checkpoint.atomic import (  # noqa: F401
 )
 from repro.checkpoint.serializer import (  # noqa: F401
     SaveOptions,
+    load_arrays,
     load_checkpoint,
     load_manifest,
     save_checkpoint,

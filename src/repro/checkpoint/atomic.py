@@ -18,6 +18,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import threading
 import time
 from pathlib import Path
 from typing import Iterator
@@ -81,15 +82,32 @@ class CommitScope:
         # the commit rename, proving the previous CMI survives (paper Q4).
         self._crash_after_data = crash_after_data
         self._open_files: list[Path] = []
+        self._synced: set[Path] = set()
+        self._files_lock = threading.Lock()
 
     def __enter__(self) -> "CommitScope":
         self.dir.mkdir(parents=True, exist_ok=False)
         return self
 
     def path(self, name: str) -> Path:
+        """Register (idempotently) a staged file for pre-commit fsync.
+
+        Thread-safe: the parallel serializer registers every striped shard
+        file (``data-0.bin … data-{W-1}.bin``) here, and COMMIT is only
+        written after all of them are durably fsync'd.
+        """
         p = self.dir / name
-        self._open_files.append(p)
+        with self._files_lock:
+            if p not in self._open_files:
+                self._open_files.append(p)
         return p
+
+    def mark_synced(self, name: str) -> None:
+        """Record that ``name`` was already fsync'd by its writer (e.g. the
+        striped shard writers fsync concurrently on close), so the commit
+        path skips the redundant serial re-fsync."""
+        with self._files_lock:
+            self._synced.add(self.dir / name)
 
     def write_text(self, name: str, text: str) -> Path:
         p = self.path(name)
@@ -107,7 +125,7 @@ class CommitScope:
             self.abort()
             return False
         for f in self._open_files:
-            if f.exists():
+            if f not in self._synced and f.exists():
                 _fsync_file(f)
         if self._crash_after_data:
             # Simulated preemption mid-commit: leave the torn staging dir on
@@ -117,16 +135,40 @@ class CommitScope:
         commit.write_text(json.dumps({"committed_at": time.time()}))
         _fsync_file(commit)
         _fsync_dir(self.dir)
-        if self.final.exists():
-            # Same-name overwrite: move old aside, rename new, drop old. The
-            # window where both exist is crash-safe because readers key on
-            # COMMIT inside whichever dir the final name points to.
-            old = Path(f"{self.final}{_STAGE_INFIX}old-{os.getpid()}")
-            os.replace(self.final, old)
-            os.replace(self.dir, self.final)
+        # Same-name overwrite: move old aside, rename new, drop old. The
+        # window where both exist is crash-safe because readers key on
+        # COMMIT inside whichever dir the final name points to. Retried:
+        # a concurrent committer can re-create ``final`` between the
+        # exists() check and the rename (ENOTEMPTY) — last commit wins.
+        moved: list[Path] = []
+        err: OSError | None = None
+        for attempt in range(8):
+            try:
+                if self.final.exists():
+                    old = Path(
+                        f"{self.final}{_STAGE_INFIX}old-{os.getpid()}-{attempt}"
+                    )
+                    os.replace(self.final, old)
+                    moved.append(old)
+                os.replace(self.dir, self.final)
+                err = None
+                break
+            except OSError as e:
+                err = e
+        if err is not None:
+            # Terminal failure (ENOSPC/EIO/…): put the most recent previous
+            # CMI back under the final name so it survives (Q4), then drop
+            # our staged data and surface the error.
+            if moved and moved[-1].exists() and not self.final.exists():
+                try:
+                    os.replace(moved[-1], self.final)
+                    moved.pop()
+                except OSError:  # pragma: no cover - best effort
+                    pass
+            self.abort()
+            raise err
+        for old in moved:
             shutil.rmtree(old, ignore_errors=True)
-        else:
-            os.replace(self.dir, self.final)
         _fsync_dir(self.final.parent)
         return False
 

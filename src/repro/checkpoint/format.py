@@ -23,7 +23,13 @@ except Exception:  # pragma: no cover
     _EXTRA_DTYPES = False
 
 FORMAT_NAME = "navp-cmi"
-FORMAT_VERSION = 2
+# Version history:
+#   1 — implicit (manifests without a "version" field): single data-0.bin
+#   2 — explicit version field, same single-file layout
+#   3 — multi-file striped layout (data-0.bin … data-{W-1}.bin) + "data_files"
+# Readers accept any version <= FORMAT_VERSION; chunk entries name their file,
+# so v1/v2 CMIs load through the same path as v3.
+FORMAT_VERSION = 3
 
 
 def dtype_to_str(dt: Any) -> str:
@@ -137,10 +143,14 @@ class Manifest:
     parent: str | None = None  # delta parent CMI name (for GC refcounting)
     format: str = FORMAT_NAME
     version: int = FORMAT_VERSION
+    # Striped data files this CMI owns (["data-0.bin", ...]). Informational —
+    # chunk entries name their file — but lets tooling/GC enumerate shard
+    # files without scanning the chunk table. Empty for v1/v2 manifests.
+    data_files: list[str] = field(default_factory=list)
     extra: dict[str, Any] = field(default_factory=dict)
 
     def to_json(self) -> dict:
-        return {
+        out = {
             "format": self.format,
             "version": self.version,
             "step": self.step,
@@ -150,18 +160,28 @@ class Manifest:
             "arrays": {k: v.to_json() for k, v in self.arrays.items()},
             "extra": self.extra,
         }
+        if self.data_files:
+            out["data_files"] = self.data_files
+        return out
 
     @staticmethod
     def from_json(d: dict) -> "Manifest":
         if d.get("format") != FORMAT_NAME:
             raise ValueError(f"not a {FORMAT_NAME} manifest: {d.get('format')!r}")
+        version = int(d.get("version", 1))
+        if version > FORMAT_VERSION:
+            raise ValueError(
+                f"manifest version {version} is newer than supported "
+                f"({FORMAT_VERSION}); upgrade the reader"
+            )
         return Manifest(
             step=int(d["step"]),
             meta=d.get("meta", {}),
             structure=d["structure"],
             arrays={k: ArrayEntry.from_json(v) for k, v in d["arrays"].items()},
             parent=d.get("parent"),
-            version=int(d.get("version", 1)),
+            version=version,
+            data_files=list(d.get("data_files", [])),
             extra=d.get("extra", {}),
         )
 

@@ -10,6 +10,23 @@ When a ``parent`` CMI is given, blocks whose (path, slice, hash) match the
 parent are recorded as *references* into the parent's data file instead of
 being rewritten — this is the paper's §Q3 incremental checkpointing.
 
+Parallel sharded I/O engine
+---------------------------
+With ``SaveOptions.writers == 1`` the save is fully sequential into a single
+``data-0.bin`` (the seed layout). With ``writers == W > 1`` the data stream
+is striped round-robin across ``data-0.bin … data-{W-1}.bin``, serviced by
+pure-I/O writer threads (one per file on big hosts; several files per thread
+on small ones) that batch queued chunks into vectored ``writev`` calls,
+while a bounded-window thread pool hashes + CRCs blocks ahead of the write
+front (hash chunk k+1 while chunk k is on the wire). Contiguous blocks are
+written as ``memoryview``s into the host buffers — no ``tobytes()`` copy.
+Chunk→file placement is round-robin over the *written* chunk index in
+enumeration order, so the manifest (files, offsets) is byte-deterministic
+for a given input regardless of thread timing — the delta hint grid
+(``core/delta.py``) and GC both rely on that. Every shard file is fsync'd
+(concurrently, by its writer thread) before ``CommitScope`` writes COMMIT,
+preserving the crash-atomicity protocol (paper §Q4).
+
 Restore path
 ------------
 ``load_checkpoint`` rebuilds the pytree. If target shardings are provided
@@ -17,12 +34,19 @@ Restore path
 ``jax.make_array_from_callback`` and each target shard reads **only the byte
 ranges of chunks overlapping that shard** — a CMI written on mesh A restores
 onto an arbitrary mesh B ("hop" between differently-shaped slices) without
-ever assembling the full array on one host unless B is unsharded.
+ever assembling the full array on one host unless B is unsharded. Reads are
+planned per (owner CMI, data file): adjacent byte ranges are coalesced into
+runs (capped at ``_MAX_RUN_BYTES``) and executed across a thread pool with
+per-thread file handles; CRC validation happens per chunk inside each run.
 """
 
 from __future__ import annotations
 
 import os
+import queue
+import threading
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Callable, Mapping
@@ -43,9 +67,24 @@ from repro.checkpoint.format import (
 )
 from repro.utils import content_hash, crc32_of, flatten_with_paths, logger
 
-DATA_FILE = "data-0.bin"
+DATA_FILE = "data-0.bin"  # shard 0; also the only file in seed-format CMIs
+
+# Coalesced restore runs are read into one buffer; cap to bound memory.
+_MAX_RUN_BYTES = 64 << 20
 
 ShardingResolver = Callable[[str, tuple[int, ...], np.dtype, ShardingRecord | None], Any]
+
+
+def data_file_name(i: int) -> str:
+    return f"data-{i}.bin"
+
+
+def default_writers() -> int:
+    return max(1, min(8, os.cpu_count() or 1))
+
+
+def _default_io_threads() -> int:
+    return max(1, min(8, os.cpu_count() or 1))
 
 
 @dataclass
@@ -58,6 +97,12 @@ class SaveOptions:
     # Chunks marked unchanged are ref'd to the parent without hashing.
     changed_hint: dict[str, np.ndarray] = field(default_factory=dict)
     validate_crc: bool = True
+    # Number of striped data files / writer threads. 0 = min(8, cpu_count).
+    # 1 = sequential single-file save (seed-compatible layout).
+    writers: int = 0
+
+    def resolved_writers(self) -> int:
+        return self.writers if self.writers > 0 else default_writers()
 
 
 class HostShards:
@@ -120,6 +165,21 @@ def _contig(x: np.ndarray) -> np.ndarray:
     return np.ascontiguousarray(x).reshape(x.shape)
 
 
+def _byte_view(block: np.ndarray):
+    """Flat byte view of a block — zero-copy when C-contiguous.
+
+    Falls back to a ``uint8`` reinterpreting view for dtypes that numpy
+    refuses to export through the buffer protocol (bfloat16/float8 from
+    ml_dtypes), and to ``tobytes()`` only for non-contiguous blocks.
+    """
+    if not block.flags.c_contiguous:
+        return block.tobytes()
+    try:
+        return memoryview(block).cast("B")
+    except (ValueError, TypeError):
+        return memoryview(block.reshape(-1).view(np.uint8))
+
+
 def _sharding_record(x: Any) -> ShardingRecord | None:
     if isinstance(x, HostShards):
         return x.record
@@ -141,21 +201,276 @@ def _sharding_record(x: Any) -> ShardingRecord | None:
     return None
 
 
+# ---------------------------------------------------------------------------
+# write engine
+# ---------------------------------------------------------------------------
+
+
 class _ChunkWriter:
-    def __init__(self, path: Path):
+    """Sequential single-file writer (the ``writers=1`` baseline path)."""
+
+    def __init__(self, path: Path, file_name: str = DATA_FILE):
+        self.file_name = file_name
         self.f = open(path, "wb")
         self.offset = 0
 
-    def append(self, buf: bytes) -> tuple[int, int]:
+    def append(self, buf, cent: ChunkEntry) -> tuple[str, int, int]:
         off = self.offset
+        n = _nbytes(buf)
         self.f.write(buf)
-        self.offset += len(buf)
-        return off, len(buf)
+        self.offset += n
+        return self.file_name, off, n
 
     def close(self) -> None:
         self.f.flush()
         os.fsync(self.f.fileno())
         self.f.close()
+
+    @property
+    def data_files(self) -> list[str]:
+        return [self.file_name]
+
+
+def _nbytes(buf) -> int:
+    return buf.nbytes if isinstance(buf, memoryview) else len(buf)
+
+
+# Writer threads gather queued chunks into vectored writes up to this size
+# (and at most IOV_MAX-safe item counts): one syscall — and on network
+# filesystems one round trip — per batch instead of per chunk.
+_WRITE_BATCH_BYTES = 8 << 20
+_WRITE_BATCH_ITEMS = 512
+
+
+def _writev_all(fd: int, bufs: list) -> None:
+    """``os.writev`` with short-write handling."""
+    bufs = [b if isinstance(b, memoryview) else memoryview(b) for b in bufs]
+    while bufs:
+        n = os.writev(fd, bufs)
+        while bufs and n >= bufs[0].nbytes:
+            n -= bufs[0].nbytes
+            bufs.pop(0)
+        if n and bufs:
+            bufs[0] = bufs[0][n:]
+
+
+class _WriterThread:
+    """Drains one queue of (file idx, buf) items for the shard files it
+    owns, in submit order.
+
+    Writer threads are pure I/O: chunks are gathered into vectored writes
+    (one ``writev`` per file per batch) with no CPU work between syscalls —
+    hashing and CRC both live on the scheduler's hash pool, so the write
+    stream never stalls behind checksum work on latency-bound filesystems.
+    Each thread fsyncs its own files before exiting, so shard fsyncs run
+    concurrently rather than serially at close. On error the thread keeps
+    draining (discarding) its queue so the scheduler can never deadlock on a
+    full queue; the error re-raises at ``close()`` which aborts the commit.
+    """
+
+    def __init__(self, index: int, files: dict[int, Any]):
+        self.files = files  # file idx -> raw file object (owned by this thread)
+        self.error: Exception | None = None
+        self.q: queue.Queue = queue.Queue(maxsize=32)
+        self.thread = threading.Thread(
+            target=self._run, name=f"cmi-writer-{index}", daemon=True
+        )
+        self.thread.start()
+
+    def _run(self) -> None:
+        done = False
+        while not done:
+            item = self.q.get()
+            if item is None:
+                break
+            batch = [item]
+            nb = _nbytes(item[1])
+            while nb < _WRITE_BATCH_BYTES and len(batch) < _WRITE_BATCH_ITEMS:
+                try:
+                    nxt = self.q.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is None:
+                    done = True
+                    break
+                batch.append(nxt)
+                nb += _nbytes(nxt[1])
+            if self.error is not None:
+                continue  # drain only; commit already doomed
+            try:
+                by_file: dict[int, list] = {}
+                for fidx, buf in batch:
+                    by_file.setdefault(fidx, []).append(buf)
+                for fidx, bufs in by_file.items():
+                    _writev_all(self.files[fidx].fileno(), bufs)
+            except Exception as e:  # surfaced at close()
+                self.error = e
+        if self.error is None:
+            try:
+                for f in self.files.values():
+                    os.fsync(f.fileno())
+            except Exception as e:
+                self.error = e
+
+    def submit(self, fidx: int, buf) -> None:
+        if self.error is not None:
+            raise self.error
+        self.q.put((fidx, buf))
+
+    def close(self) -> None:
+        self.q.put(None)
+        self.thread.join()
+        for f in self.files.values():
+            f.close()
+        if self.error is not None:
+            raise self.error
+
+
+class _StripedWriterPool:
+    """Round-robin chunk striping over W shard files.
+
+    The thread count is ``min(W, max(2, cpu_count))`` — on small hosts many
+    stripe files share a writer thread (per-file append order is preserved:
+    the scheduler feeds each thread in enumeration order), while on large
+    hosts each file gets its own thread. Offsets are assigned at submit time
+    on the scheduler thread, so file placement is deterministic regardless
+    of thread timing.
+    """
+
+    def __init__(self, scope: CommitScope, writers: int):
+        self.names = [data_file_name(i) for i in range(writers)]
+        self.offsets = [0] * writers
+        files = [open(scope.path(n), "wb", buffering=0) for n in self.names]
+        # On high-latency filesystems more threads hide round trips even on
+        # few cores; REPRO_CMI_WRITER_THREADS overrides the heuristic.
+        nthreads = int(os.environ.get("REPRO_CMI_WRITER_THREADS", "0"))
+        if nthreads <= 0:
+            nthreads = min(writers, max(2, os.cpu_count() or 1))
+        nthreads = min(writers, nthreads)
+        self.threads = [
+            _WriterThread(t, {i: files[i] for i in range(writers) if i % nthreads == t})
+            for t in range(nthreads)
+        ]
+        self._next = 0
+
+    def append(self, buf, cent: ChunkEntry) -> tuple[str, int, int]:
+        n = _nbytes(buf)
+        i = self._next % len(self.names)
+        self._next += 1
+        off = self.offsets[i]
+        self.offsets[i] += n
+        self.threads[i % len(self.threads)].submit(i, buf)
+        return self.names[i], off, n
+
+    def close(self) -> None:
+        first: Exception | None = None
+        for t in self.threads:
+            try:
+                t.close()
+            except Exception as e:
+                first = first or e
+        if first is not None:
+            raise first
+
+    @property
+    def data_files(self) -> list[str]:
+        return list(self.names)
+
+
+def _hash_and_crc(buf) -> tuple[str, int]:
+    return content_hash(buf), crc32_of(buf)
+
+
+class _ChunkSink:
+    """Finalises chunk entries in deterministic enumeration order.
+
+    The caller appends a placeholder slot per chunk (`put_ref`/`put_data`);
+    data chunks are hashed + CRC'd on a bounded-window pool while earlier
+    chunks stream to the pure-I/O striped writers, pipelining CPU against
+    disk (hash chunk k+1 while chunk k is on the wire). With ``writers == 1``
+    everything runs inline on the calling thread.
+    """
+
+    def __init__(self, scope: CommitScope, writers: int, stats: dict, parent: str | None):
+        self.parallel = writers > 1
+        self.stats = stats
+        self.parent = parent
+        if self.parallel:
+            self.engine: Any = _StripedWriterPool(scope, writers)
+            hash_threads = max(1, min(writers, os.cpu_count() or 1))
+            self.pool: ThreadPoolExecutor | None = ThreadPoolExecutor(
+                max_workers=hash_threads, thread_name_prefix="cmi-hash"
+            )
+            self.window = writers * 4
+        else:
+            self.engine = _ChunkWriter(scope.path(DATA_FILE))
+            self.pool = None
+            self.window = 0
+        self._pending: deque = deque()
+
+    def _ref_entry(self, bslice, pchunk: ChunkEntry, h: str | None = None) -> ChunkEntry:
+        cent = ChunkEntry(
+            slice=[list(s) for s in bslice],
+            file=pchunk.file,
+            offset=pchunk.offset,
+            nbytes=pchunk.nbytes,
+            crc32=pchunk.crc32,
+            hash=h if h is not None else pchunk.hash,
+            ref=pchunk.ref or self.parent,
+        )
+        self.stats["ref_bytes"] += cent.nbytes
+        self.stats["ref_chunks"] += 1
+        return cent
+
+    def put_ref(self, chunks: list, bslice, pchunk: ChunkEntry) -> None:
+        self.stats["chunks"] += 1
+        chunks.append(self._ref_entry(bslice, pchunk))
+
+    def put_data(self, chunks: list, bslice, block: np.ndarray, pchunk: ChunkEntry | None) -> None:
+        self.stats["chunks"] += 1
+        buf = _byte_view(block)
+        if self.pool is None:
+            chunks.append(self._finalise(bslice, pchunk, buf, _hash_and_crc(buf)))
+            return
+        idx = len(chunks)
+        chunks.append(None)  # slot filled at drain, preserving order
+        fut = self.pool.submit(_hash_and_crc, buf)
+        self._pending.append((chunks, idx, bslice, pchunk, buf, fut))
+        if len(self._pending) >= self.window:
+            self._drain_one()
+
+    def _finalise(self, bslice, pchunk, buf, h_crc: tuple[str, int]) -> ChunkEntry:
+        h, crc = h_crc
+        if pchunk is not None and pchunk.hash == h:
+            return self._ref_entry(bslice, pchunk, h)
+        cent = ChunkEntry(
+            slice=[list(s) for s in bslice],
+            file="",
+            offset=0,
+            nbytes=0,
+            crc32=crc,
+            hash=h,
+        )
+        cent.file, cent.offset, cent.nbytes = self.engine.append(buf, cent)
+        self.stats["written_bytes"] += cent.nbytes
+        return cent
+
+    def _drain_one(self) -> None:
+        chunks, idx, bslice, pchunk, buf, fut = self._pending.popleft()
+        chunks[idx] = self._finalise(bslice, pchunk, buf, fut.result())
+
+    def close(self) -> None:
+        try:
+            while self._pending:
+                self._drain_one()
+        finally:
+            if self.pool is not None:
+                self.pool.shutdown(wait=True)
+            self.engine.close()
+
+    @property
+    def data_files(self) -> list[str]:
+        return self.engine.data_files
 
 
 def _chunk_rows(shard_shape: tuple[int, ...], itemsize: int, chunk_bytes: int) -> int:
@@ -178,6 +493,7 @@ def save_checkpoint(
 ) -> Manifest:
     """Serialize ``tree`` as CMI ``<store_root>/<name>``. Returns the manifest."""
     opts = options or SaveOptions()
+    writers = opts.resolved_writers()
     store_root = Path(store_root)
     store_root.mkdir(parents=True, exist_ok=True)
     final = store_root / name
@@ -198,7 +514,7 @@ def save_checkpoint(
     stats = {"written_bytes": 0, "ref_bytes": 0, "chunks": 0, "ref_chunks": 0}
 
     with CommitScope(final, crash_after_data=_crash_after_data) as scope:
-        writer = _ChunkWriter(scope.path(DATA_FILE))
+        sink = _ChunkSink(scope, writers, stats, parent=opts.parent)
         try:
             for apath in sorted(array_paths):
                 x = flat[apath]
@@ -235,49 +551,15 @@ def save_checkpoint(
                         if unchanged_hint:
                             # Device-side bitmap says this block is identical;
                             # skip the host hash entirely (paper §Q3/Q5).
-                            cent = ChunkEntry(
-                                slice=[list(s) for s in bslice],
-                                file=pchunk.file,
-                                offset=pchunk.offset,
-                                nbytes=pchunk.nbytes,
-                                crc32=pchunk.crc32,
-                                hash=pchunk.hash,
-                                ref=pchunk.ref or opts.parent,
-                            )
-                            stats["ref_bytes"] += cent.nbytes
-                            stats["ref_chunks"] += 1
+                            sink.put_ref(entry.chunks, bslice, pchunk)
                         else:
-                            buf = block.tobytes()
-                            h = content_hash(buf)
-                            if pchunk is not None and pchunk.hash == h:
-                                cent = ChunkEntry(
-                                    slice=[list(s) for s in bslice],
-                                    file=pchunk.file,
-                                    offset=pchunk.offset,
-                                    nbytes=pchunk.nbytes,
-                                    crc32=pchunk.crc32,
-                                    hash=h,
-                                    ref=pchunk.ref or opts.parent,
-                                )
-                                stats["ref_bytes"] += cent.nbytes
-                                stats["ref_chunks"] += 1
-                            else:
-                                off, n = writer.append(buf)
-                                cent = ChunkEntry(
-                                    slice=[list(s) for s in bslice],
-                                    file=DATA_FILE,
-                                    offset=off,
-                                    nbytes=n,
-                                    crc32=crc32_of(buf),
-                                    hash=h,
-                                )
-                                stats["written_bytes"] += n
-                        stats["chunks"] += 1
-                        entry.chunks.append(cent)
+                            sink.put_data(entry.chunks, bslice, block, pchunk)
                         chunk_counter += 1
                 arrays[apath] = entry
         finally:
-            writer.close()
+            sink.close()
+        for fname in sink.data_files:  # writers fsync'd these on close
+            scope.mark_synced(fname)
 
         manifest = Manifest(
             step=step,
@@ -285,12 +567,13 @@ def save_checkpoint(
             structure=structure,
             arrays=arrays,
             parent=opts.parent,
+            data_files=sink.data_files,
             extra={"stats": stats},
         )
         scope.write_text("manifest.json", manifest.dumps())
     logger.debug(
-        "saved CMI %s: %d chunks (%d ref'd), %.1f MiB written, %.1f MiB ref'd",
-        name, stats["chunks"], stats["ref_chunks"],
+        "saved CMI %s: %d chunks (%d ref'd) across %d files, %.1f MiB written, %.1f MiB ref'd",
+        name, stats["chunks"], stats["ref_chunks"], writers,
         stats["written_bytes"] / 2**20, stats["ref_bytes"] / 2**20,
     )
     return manifest
@@ -321,33 +604,145 @@ def _overlap(
 
 
 class _ChunkReader:
-    """Reads chunk byte ranges with file-handle caching + CRC validation."""
+    """Thread-pooled chunk range reader with per-thread file handles.
 
-    def __init__(self, store_root: Path, self_name: str, validate_crc: bool):
+    ``io_threads <= 1`` reads serially on the calling thread (and still
+    validates CRCs); otherwise coalesced runs execute concurrently on a
+    shared pool. File handles are cached per (thread, path) so concurrent
+    ``seek``+``read`` never race on shared descriptors.
+    """
+
+    def __init__(
+        self,
+        store_root: Path,
+        self_name: str,
+        validate_crc: bool,
+        io_threads: int = 0,
+    ):
         self.root = store_root
         self.name = self_name
         self.validate = validate_crc
-        self._files: dict[Path, Any] = {}
+        self.threads = io_threads if io_threads > 0 else _default_io_threads()
+        self._tls = threading.local()
+        self._all_files: list[Any] = []
+        self._lock = threading.Lock()
+        self._pool: ThreadPoolExecutor | None = None
+
+    def _open(self, p: Path):
+        cache = getattr(self._tls, "files", None)
+        if cache is None:
+            cache = self._tls.files = {}
+        f = cache.get(p)
+        if f is None:
+            f = cache[p] = open(p, "rb")
+            with self._lock:
+                self._all_files.append(f)
+        return f
+
+    def file_path(self, owner: str, file: str) -> Path:
+        return self.root / owner / file
+
+    def read_range(self, path: Path, offset: int, nbytes: int) -> bytes:
+        f = self._open(path)
+        f.seek(offset)
+        buf = f.read(nbytes)
+        if len(buf) != nbytes:
+            raise IOError(f"short read on {path} @ {offset}")
+        return buf
 
     def read(self, chunk: ChunkEntry, dtype: np.dtype) -> np.ndarray:
-        owner = chunk.ref or self.name
-        p = self.root / owner / chunk.file
-        f = self._files.get(p)
-        if f is None:
-            f = self._files[p] = open(p, "rb")
-        f.seek(chunk.offset)
-        buf = f.read(chunk.nbytes)
-        if len(buf) != chunk.nbytes:
-            raise IOError(f"short read on {p} @ {chunk.offset}")
+        """Single-chunk read (kept for targeted/serial use)."""
+        p = self.file_path(chunk.ref or self.name, chunk.file)
+        buf = self.read_range(p, chunk.offset, chunk.nbytes)
         if self.validate and crc32_of(buf) != chunk.crc32:
             raise IOError(f"CRC mismatch in {p} @ {chunk.offset} (corrupt CMI)")
         shape = tuple(b - a for a, b in chunk.slice)
         return np.frombuffer(buf, dtype=dtype).reshape(shape)
 
+    def pool(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.threads, thread_name_prefix="cmi-read"
+            )
+        return self._pool
+
     def close(self) -> None:
-        for f in self._files.values():
-            f.close()
-        self._files.clear()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+        with self._lock:
+            for f in self._all_files:
+                f.close()
+            self._all_files.clear()
+
+
+@dataclass
+class _ReadRun:
+    """A coalesced contiguous byte range in one data file."""
+
+    path: Path
+    offset: int
+    nbytes: int
+    items: list  # [(ChunkEntry, overlap)]
+
+
+def _plan_runs(
+    entry: ArrayEntry, target: tuple[tuple[int, int], ...], reader: _ChunkReader
+) -> list[_ReadRun]:
+    """Group target-overlapping chunks by file; coalesce adjacent ranges."""
+    by_file: dict[tuple[str, str], list] = {}
+    for chunk in entry.chunks:
+        ov = _overlap(chunk.slice, target)
+        if ov is None:
+            continue
+        by_file.setdefault((chunk.ref or reader.name, chunk.file), []).append(
+            (chunk, ov)
+        )
+    runs: list[_ReadRun] = []
+    for (owner, file), items in sorted(by_file.items()):
+        items.sort(key=lambda co: co[0].offset)
+        path = reader.file_path(owner, file)
+        cur: _ReadRun | None = None
+        for chunk, ov in items:
+            if (
+                cur is not None
+                and chunk.offset == cur.offset + cur.nbytes
+                and cur.nbytes + chunk.nbytes <= _MAX_RUN_BYTES
+            ):
+                cur.nbytes += chunk.nbytes
+                cur.items.append((chunk, ov))
+            else:
+                cur = _ReadRun(path, chunk.offset, chunk.nbytes, [(chunk, ov)])
+                runs.append(cur)
+    return runs
+
+
+def _exec_run(
+    run: _ReadRun,
+    dtype: np.dtype,
+    target: tuple[tuple[int, int], ...],
+    out: np.ndarray,
+    reader: _ChunkReader,
+) -> int:
+    """Read one coalesced run, CRC-check each chunk, scatter into ``out``."""
+    buf = memoryview(reader.read_range(run.path, run.offset, run.nbytes))
+    filled = 0
+    for chunk, ov in run.items:
+        rel = chunk.offset - run.offset
+        raw = buf[rel : rel + chunk.nbytes]
+        if reader.validate and crc32_of(raw) != chunk.crc32:
+            raise IOError(
+                f"CRC mismatch in {run.path} @ {chunk.offset} (corrupt CMI)"
+            )
+        shape = tuple(b - a for a, b in chunk.slice)
+        block = np.frombuffer(raw, dtype=dtype).reshape(shape)
+        src = tuple(
+            slice(lo - c0, hi - c0) for (lo, hi), (c0, _) in zip(ov, chunk.slice)
+        )
+        dst = tuple(slice(lo - t0, hi - t0) for (lo, hi), (t0, _) in zip(ov, target))
+        out[dst] = block[src]
+        filled += int(np.prod([hi - lo for lo, hi in ov], dtype=np.int64)) if ov else 1
+    return filled
 
 
 def _assemble(
@@ -359,18 +754,15 @@ def _assemble(
     dtype = dtype_from_str(entry.dtype)
     tshape = tuple(b - a for a, b in target)
     out = np.empty(tshape, dtype=dtype)
-    filled = 0
-    for chunk in entry.chunks:
-        ov = _overlap(chunk.slice, target)
-        if ov is None:
-            continue
-        block = reader.read(chunk, dtype)
-        src = tuple(
-            slice(lo - c0, hi - c0) for (lo, hi), (c0, _) in zip(ov, chunk.slice)
-        )
-        dst = tuple(slice(lo - t0, hi - t0) for (lo, hi), (t0, _) in zip(ov, target))
-        out[dst] = block[src]
-        filled += int(np.prod([hi - lo for lo, hi in ov], dtype=np.int64)) if ov else 1
+    runs = _plan_runs(entry, target, reader)
+    if reader.threads > 1 and len(runs) > 1:
+        futs = [
+            reader.pool().submit(_exec_run, run, dtype, target, out, reader)
+            for run in runs
+        ]
+        filled = sum(f.result() for f in futs)
+    else:
+        filled = sum(_exec_run(run, dtype, target, out, reader) for run in runs)
     expected = int(np.prod(tshape, dtype=np.int64)) if tshape else 1
     if filled != expected:
         raise IOError(
@@ -386,16 +778,19 @@ def load_checkpoint(
     *,
     shardings: Mapping[str, Any] | ShardingResolver | None = None,
     validate_crc: bool = True,
+    io_threads: int = 0,
 ) -> tuple[Any, Manifest]:
     """Restore a CMI. Returns ``(tree, manifest)``.
 
     ``shardings`` may be: None (restore numpy arrays); a mapping from array
     path to ``jax.sharding.Sharding``; or a resolver callback
     ``(path, shape, dtype, saved_sharding_record) -> Sharding | None``.
+    ``io_threads`` bounds the concurrent-read pool (0 = min(8, cpu_count),
+    1 = serial).
     """
     store_root = Path(store_root)
     manifest = load_manifest(store_root, name)
-    reader = _ChunkReader(store_root, name, validate_crc)
+    reader = _ChunkReader(store_root, name, validate_crc, io_threads)
     try:
         arrays: dict[str, Any] = {}
         for apath, entry in manifest.arrays.items():
@@ -431,11 +826,12 @@ def load_arrays(
     *,
     shardings: Mapping[str, Any] | ShardingResolver | None = None,
     validate_crc: bool = True,
+    io_threads: int = 0,
 ) -> dict[str, Any]:
     """Partial restore: just the named arrays as a flat {path: array} dict."""
     store_root = Path(store_root)
     manifest = load_manifest(store_root, name)
-    reader = _ChunkReader(store_root, name, validate_crc)
+    reader = _ChunkReader(store_root, name, validate_crc, io_threads)
     out: dict[str, Any] = {}
     try:
         for apath in paths if paths is not None else list(manifest.arrays):

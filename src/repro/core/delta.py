@@ -15,6 +15,12 @@ Two cooperating pieces:
 
 The chunk grid here must match the serializer's (axis-0 row blocks of
 ``chunk_bytes``) — both call :func:`repro.checkpoint.serializer._chunk_rows`.
+The grid is independent of ``SaveOptions.writers``: striping only decides
+which ``data-*.bin`` a written chunk lands in, and the serializer's
+round-robin placement is deterministic in enumeration order, so hint bitmap
+indices stay aligned with the chunk table no matter how many writers ran.
+A delta chunk may therefore reference a parent chunk living in any of the
+parent's shard files (``ChunkEntry.file`` + ``ref`` resolve it).
 """
 
 from __future__ import annotations

@@ -54,6 +54,8 @@ class DHP:
         delta: DeltaPolicy | None = None,
         async_publish: bool = False,
         chunk_bytes: int = 16 << 20,
+        writers: int = 0,
+        io_threads: int = 0,
     ):
         self.nbs = nbs
         self.node = node
@@ -61,6 +63,10 @@ class DHP:
         self.delta = DeltaTracker(delta or DeltaPolicy())
         self.async_publish = async_publish
         self.chunk_bytes = chunk_bytes
+        # Parallel I/O engine knobs: striped save writers / concurrent restore
+        # reads (0 = min(8, cpu_count) each; 1 = sequential).
+        self.writers = writers
+        self.io_threads = io_threads
         self._worker: threading.Thread | None = None
         self._q: queue.Queue = queue.Queue()
         self._pending = 0
@@ -93,7 +99,7 @@ class DHP:
             state,
             step=step,
             meta={"src": src, "dest": dest},
-            options=SaveOptions(chunk_bytes=self.chunk_bytes),
+            options=SaveOptions(chunk_bytes=self.chunk_bytes, writers=self.writers),
         )
         del state  # (4) "exit": the source's copy is gone
         out = self.nbs.call(dest, "svc/hop", cmi=name)
@@ -132,6 +138,7 @@ class DHP:
                 chunk_bytes=self.chunk_bytes,
                 parent=parent,
                 changed_hint=changed_hint or {},
+                writers=self.writers,
             )
             self.nbs.plugins.emit("on_checkpoint", node=self.node, cmi=name, step=step)
             if self.async_publish:
@@ -178,7 +185,10 @@ class DHP:
         if job.cmi is None:
             raise ValueError(f"job {job_id} has no published CMI")
         mesh = self.nbs.node(node).mesh
-        state, manifest = restore_cmi(self.jobstore.cmi_root(job_id), job.cmi, mesh=mesh)
+        state, manifest = restore_cmi(
+            self.jobstore.cmi_root(job_id), job.cmi, mesh=mesh,
+            io_threads=self.io_threads,
+        )
         self.nbs.plugins.emit("on_restart", node=node, cmi=job.cmi, step=manifest.step)
         self.delta.record_published(job_id, job.cmi)  # future deltas chain here
         return state, manifest.step

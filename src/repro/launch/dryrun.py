@@ -243,7 +243,9 @@ def run_cell(
         compiled = lowered.compile()
         rec["compile_s"] = round(time.time() - t1, 2)
         rec["memory"] = _memory_analysis_dict(compiled)
-        cost = compiled.cost_analysis() or {}
+        from repro.launch.hlo_stats import xla_cost_analysis
+
+        cost = xla_cost_analysis(compiled)
         rec["cost"] = {
             k: float(cost[k])
             for k in ("flops", "bytes accessed", "bytes accessedout{}", "optimal_seconds")

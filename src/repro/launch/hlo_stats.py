@@ -229,6 +229,19 @@ def _fusion_out_bytes(comp: _Comp) -> int | None:
     return resolve(root)
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns ``[{...}]`` (one dict per device program); newer jax
+    (>= 0.4.35) returns the dict directly. Always hands back a plain dict so
+    callers can do ``xla_cost_analysis(c)["flops"]`` everywhere.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
 def analyze_hlo(text: str) -> dict:
     comps, entry = parse_hlo(text)
     f_access = {n: _fusion_param_access(c) for n, c in comps.items()}

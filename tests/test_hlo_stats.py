@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.launch.hlo_stats import analyze_hlo
+from repro.launch.hlo_stats import analyze_hlo, xla_cost_analysis
 
 A = jax.ShapeDtypeStruct((256, 256), jnp.float32)
 ONE = 2 * 256**3
@@ -21,7 +21,7 @@ def test_scan_flops_multiplied_by_trip_count():
     r = analyze_hlo(_hlo(scanned, A))
     assert abs(r["flops"] / ONE - 8.0) < 0.01
     # XLA's own analysis counts the body once — document the discrepancy
-    naive = jax.jit(scanned).lower(A).compile().cost_analysis()["flops"]
+    naive = xla_cost_analysis(jax.jit(scanned).lower(A).compile())["flops"]
     assert naive < r["flops"] / 4
 
 

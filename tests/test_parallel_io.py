@@ -1,0 +1,246 @@
+"""Parallel sharded CMI I/O engine: striping, determinism, crash-atomicity
+across shard files, delta refs into any parent shard, and backward
+compatibility with seed-era single-file (v1/v2) CMIs."""
+
+import json
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import SaveOptions, load_checkpoint, save_checkpoint
+from repro.checkpoint.atomic import gc_orphans, is_committed, list_committed
+from repro.checkpoint.format import FORMAT_VERSION, Manifest
+from repro.checkpoint.serializer import load_arrays, load_manifest
+from repro.core.cmi import snapshot_to_host
+
+
+def make_tree(seed=0, rows=64):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.standard_normal((rows, 16)).astype(np.float32),
+        "b": rng.standard_normal((rows,)).astype(np.float16),
+        "bf": jnp.asarray(rng.standard_normal((rows, 4)), jnp.bfloat16),
+        "step": 3,
+    }
+
+
+def assert_tree_eq(a, b):
+    fa, fb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        if hasattr(x, "shape"):
+            np.testing.assert_array_equal(
+                np.asarray(x, np.float64), np.asarray(y, np.float64)
+            )
+        else:
+            assert x == y
+
+
+def test_multiwriter_stripes_and_roundtrips(tmp_path):
+    tree = make_tree()
+    m = save_checkpoint(
+        tmp_path, "c", tree, options=SaveOptions(chunk_bytes=256, writers=4)
+    )
+    assert m.version == FORMAT_VERSION
+    assert m.data_files == [f"data-{i}.bin" for i in range(4)]
+    for f in m.data_files:
+        assert (tmp_path / "c" / f).exists()
+    used = {c.file for e in m.arrays.values() for c in e.chunks}
+    assert len(used) > 1, "small chunks must stripe across multiple files"
+    got, _ = load_checkpoint(tmp_path, "c", io_threads=4)
+    assert_tree_eq(got, tree)
+
+
+def test_manifest_deterministic_across_runs(tmp_path):
+    tree = make_tree()
+    opts = SaveOptions(chunk_bytes=256, writers=4)
+    m1 = save_checkpoint(tmp_path, "a", tree, options=opts)
+    m2 = save_checkpoint(tmp_path, "b", tree, options=opts)
+    # identical chunk tables (files, offsets, hashes) despite threaded writers
+    a, b = m1.to_json(), m2.to_json()
+    assert a["arrays"] == b["arrays"]
+    assert a["extra"] == b["extra"]
+
+
+def test_writer_counts_restore_identically(tmp_path):
+    tree = make_tree()
+    for w in (1, 2, 3, 8):
+        save_checkpoint(
+            tmp_path, f"w{w}", tree, options=SaveOptions(chunk_bytes=256, writers=w)
+        )
+    base, _ = load_checkpoint(tmp_path, "w1", io_threads=1)
+    for w in (2, 3, 8):
+        got, _ = load_checkpoint(tmp_path, f"w{w}", io_threads=w)
+        assert_tree_eq(got, base)
+    # same content hashes regardless of striping
+    h1 = [c.hash for c in load_manifest(tmp_path, "w1").arrays["w"].chunks]
+    h8 = [c.hash for c in load_manifest(tmp_path, "w8").arrays["w"].chunks]
+    assert h1 == h8
+
+
+def test_multiwriter_crash_is_uncommitted(tmp_path):
+    """Reuse the _crash_after_data hook: a save torn after all shard files
+    are written but before COMMIT must be invisible (paper §Q4)."""
+    tree = make_tree()
+    with pytest.raises(Exception):
+        save_checkpoint(
+            tmp_path, "c", tree,
+            options=SaveOptions(chunk_bytes=256, writers=4),
+            _crash_after_data=True,
+        )
+    assert not is_committed(tmp_path / "c")
+    assert list_committed(tmp_path) == []
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(tmp_path, "c")
+    assert len(gc_orphans(tmp_path)) == 1
+
+
+def test_multiwriter_crash_preserves_previous(tmp_path):
+    tree = make_tree(seed=1)
+    save_checkpoint(tmp_path, "c", tree, options=SaveOptions(chunk_bytes=256, writers=4))
+    with pytest.raises(Exception):
+        save_checkpoint(
+            tmp_path, "c", make_tree(seed=2),
+            options=SaveOptions(chunk_bytes=256, writers=4),
+            _crash_after_data=True,
+        )
+    got, _ = load_checkpoint(tmp_path, "c")
+    assert_tree_eq(got, tree)
+
+
+def test_delta_refs_reach_any_parent_shard(tmp_path):
+    """A delta CMI must be able to reference parent chunks living in any of
+    the parent's data-*.bin shard files."""
+    tree = make_tree()
+    save_checkpoint(tmp_path, "p", tree, options=SaveOptions(chunk_bytes=256, writers=4))
+    child = {**tree, "w": tree["w"].copy()}
+    child["w"][5] += 1.0
+    m = save_checkpoint(
+        tmp_path, "d", child,
+        options=SaveOptions(chunk_bytes=256, writers=4, parent="p"),
+    )
+    ref_files = {c.file for e in m.arrays.values() for c in e.chunks if c.ref == "p"}
+    assert len(ref_files) > 1, "delta must reference chunks across parent shards"
+    assert m.extra["stats"]["ref_chunks"] > 0
+    got, _ = load_checkpoint(tmp_path, "d", io_threads=4)
+    assert_tree_eq(got, child)
+
+
+def test_seed_format_cmi_still_restores(tmp_path):
+    """A seed-era CMI — single data-0.bin, manifest without version or
+    data_files fields — must restore bit-exactly through the same loader."""
+    rng = np.random.default_rng(7)
+    w = rng.standard_normal((40, 16)).astype(np.float32)
+    b = rng.standard_normal((5,)).astype(np.float64)
+    # hand-roll the v1 layout: sequential chunks in one file, no new fields
+    d = tmp_path / "seed"
+    d.mkdir()
+    blobs, arrays, off = [], {}, 0
+    for name, arr, nrows in (("w", w, 16), ("b", b, 5)):
+        chunks = []
+        for r0 in range(0, arr.shape[0], nrows):
+            block = arr[r0 : r0 + nrows]
+            buf = block.tobytes()
+            import hashlib
+
+            chunks.append({
+                "slice": [[r0, r0 + block.shape[0]]] + [[0, s] for s in arr.shape[1:]],
+                "file": "data-0.bin",
+                "offset": off,
+                "nbytes": len(buf),
+                "crc32": zlib.crc32(buf) & 0xFFFFFFFF,
+                "hash": hashlib.blake2b(buf, digest_size=16).hexdigest(),
+            })
+            blobs.append(buf)
+            off += len(buf)
+        arrays[name] = {
+            "shape": list(arr.shape), "dtype": arr.dtype.name,
+            "chunks": chunks, "sharding": None,
+        }
+    manifest = {
+        "format": "navp-cmi",
+        "step": 11,
+        "meta": {},
+        "parent": None,
+        "structure": {"$kind": "dict", "items": {
+            "w": {"$array": "w"}, "b": {"$array": "b"},
+        }},
+        "arrays": arrays,
+        "extra": {},
+        # deliberately NO "version" and NO "data_files"
+    }
+    (d / "data-0.bin").write_bytes(b"".join(blobs))
+    (d / "manifest.json").write_text(json.dumps(manifest))
+    (d / "COMMIT").write_text("{}")
+
+    man = load_manifest(tmp_path, "seed")
+    assert man.version == 1 and man.data_files == []
+    got, man2 = load_checkpoint(tmp_path, "seed", io_threads=4)
+    assert man2.step == 11
+    np.testing.assert_array_equal(got["w"], w)
+    np.testing.assert_array_equal(got["b"], b)
+    # and a new-engine delta can chain off the legacy parent
+    child = {"w": w.copy(), "b": b}
+    m = save_checkpoint(
+        tmp_path, "child", child,
+        options=SaveOptions(chunk_bytes=w[:16].nbytes, writers=4, parent="seed"),
+    )
+    assert any(c.ref == "seed" for c in m.arrays["w"].chunks)
+    got2, _ = load_checkpoint(tmp_path, "child")
+    np.testing.assert_array_equal(got2["w"], w)
+
+
+def test_future_manifest_version_rejected(tmp_path):
+    save_checkpoint(tmp_path, "c", {"x": np.ones(4)})
+    p = tmp_path / "c" / "manifest.json"
+    d = json.loads(p.read_text())
+    d["version"] = FORMAT_VERSION + 1
+    p.write_text(json.dumps(d))
+    with pytest.raises(ValueError, match="newer than supported"):
+        load_manifest(tmp_path, "c")
+
+
+def test_parallel_restore_detects_corruption(tmp_path):
+    rng = np.random.default_rng(3)
+    tree = {"x": rng.standard_normal((64, 32)).astype(np.float32)}
+    m = save_checkpoint(tmp_path, "c", tree, options=SaveOptions(chunk_bytes=512, writers=4))
+    victim = sorted({c.file for c in m.arrays["x"].chunks})[-1]
+    p = tmp_path / "c" / victim
+    raw = bytearray(p.read_bytes())
+    raw[7] ^= 0xFF
+    p.write_bytes(bytes(raw))
+    with pytest.raises(IOError, match="CRC"):
+        load_checkpoint(tmp_path, "c", io_threads=4)
+    got, _ = load_checkpoint(tmp_path, "c", validate_crc=False, io_threads=4)
+    assert got["x"].shape == (64, 32)
+
+
+def test_partial_restore_parallel(tmp_path):
+    tree = make_tree()
+    save_checkpoint(tmp_path, "c", tree, options=SaveOptions(chunk_bytes=256, writers=4))
+    out = load_arrays(tmp_path, "c", paths=["w"], io_threads=4)
+    assert set(out) == {"w"}
+    np.testing.assert_array_equal(out["w"], tree["w"])
+
+
+def test_parallel_snapshot_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(128, dtype=jnp.float32).reshape(16, 8), "s": 5}
+    host = snapshot_to_host(tree, copy_threads=4)
+    save_checkpoint(tmp_path, "c", host, options=SaveOptions(chunk_bytes=128, writers=2))
+    got, _ = load_checkpoint(tmp_path, "c", io_threads=2)
+    np.testing.assert_array_equal(got["a"], np.asarray(tree["a"]))
+    assert got["s"] == 5
+
+
+def test_empty_shard_files_are_harmless(tmp_path):
+    # fewer chunks than writers: trailing shard files exist but are empty
+    m = save_checkpoint(tmp_path, "c", {"x": np.ones(4, np.float32)},
+                        options=SaveOptions(writers=8))
+    assert len(m.data_files) == 8
+    sizes = [(tmp_path / "c" / f).stat().st_size for f in m.data_files]
+    assert sizes[0] == 16 and all(s == 0 for s in sizes[1:])
+    got, _ = load_checkpoint(tmp_path, "c")
+    np.testing.assert_array_equal(got["x"], np.ones(4, np.float32))
