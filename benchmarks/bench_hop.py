@@ -1,13 +1,26 @@
-"""Paper Experiment 2 (second environment): hop latency, live vs store.
+"""Paper Experiment 2 (second environment): hop latency, live vs store vs
+cross-process.
 
-The paper compares local-disk CMI cost against network+S3. Here: ``live``
-hop (direct device_put resharding — the paper's §Q5 streaming future work)
-vs ``store`` hop (checkpoint → shared store → svc/hop restore, Fig. 3/4).
+The paper compares local-disk CMI cost against network+S3. Here, three ways
+to move state between nodes:
+
+``live``    direct device_put resharding (the paper's §Q5 streaming future
+            work) — both nodes share the process and device pool.
+``store``   checkpoint → shared store → svc/hop restore (Fig. 3/4), dest
+            node in the *same* process.
+``xproc``   the same store-mediated hop, but the destination node is a real
+            worker process behind the fabric RPC — save + socket request +
+            remote restore. The delta over ``store`` is the fabric tax.
+
+Trials are interleaved across configs (config A trial 1, config B trial 1,
+..., config A trial 2, ...) so filesystem cache state and background noise
+spread evenly instead of biasing whichever config runs last.
 """
 
 from __future__ import annotations
 
 import shutil
+import statistics
 import tempfile
 import time
 
@@ -21,34 +34,68 @@ from repro.utils import tree_nbytes
 MB = 1 << 20
 
 
-def run(n_mb: int = 64) -> list[tuple[str, float, str]]:
+def run(n_mb: int = 64, trials: int = 3, xproc: bool = True) -> list[tuple[str, float, str]]:
     rng = np.random.default_rng(0)
     n = n_mb * MB // 4 // 256
-    state = {"x": jnp.asarray(rng.standard_normal((n, 256)), jnp.float32)}
-    nbytes = tree_nbytes(state)
+    make_state = lambda: {"x": jnp.asarray(rng.standard_normal((n, 256)), jnp.float32)}  # noqa: E731
+    nbytes = tree_nbytes(make_state())
     root = tempfile.mkdtemp(prefix="bench-hop-")
-    rows = []
+    sup = None
+    times: dict[str, list[float]] = {"hop_live": [], "hop_store": []}
     try:
         nbs = NBS(root)
         mesh = jax.make_mesh((1,), ("data",))
         nbs.add_node("A", mesh=mesh)
         nbs.add_node("B", mesh=mesh)
-        dhp = DHP(nbs, "A")
-        # live hop
-        t0 = time.perf_counter()
-        state = dhp.hop(state, "B", via="live")
-        jax.block_until_ready(state)
-        t_live = time.perf_counter() - t0
-        rows.append(("hop_live", t_live * 1e6, f"{nbytes/t_live/1e9:.2f}GB/s"))
-        # store hop (checkpoint + restore through the shared store)
-        t0 = time.perf_counter()
-        state = dhp.hop(state, "A", via="store")
-        jax.block_until_ready(state)
-        t_store = time.perf_counter() - t0
-        rows.append(
-            ("hop_store", t_store * 1e6,
-             f"{nbytes/t_store/1e9:.2f}GB/s store/live={t_store/max(t_live,1e-9):.1f}x")
-        )
+        nbs.add_node("C", mesh=None)  # store-hop dest (no mesh -> store path)
+        if xproc:
+            try:
+                from repro.fabric.supervisor import FabricSupervisor
+
+                sup = FabricSupervisor(root)
+                handle = sup.spawn("W", serve_only=True)
+                nbs.add_remote_node("W", handle.address)
+                times["hop_xproc"] = []
+            except Exception as e:  # pragma: no cover - spawn-impossible envs
+                print(f"xproc mode unavailable ({e}); skipping")
+                sup = None
+        # interleaved: one trial of every config per round
+        for _ in range(trials):
+            dhp = DHP(nbs, "A")
+            state = make_state()
+            t0 = time.perf_counter()
+            state = dhp.hop(state, "B", via="live")
+            jax.block_until_ready(state)
+            times["hop_live"].append(time.perf_counter() - t0)
+            del state
+
+            dhp = DHP(nbs, "A")
+            state = make_state()
+            t0 = time.perf_counter()
+            state = dhp.hop(state, "C", via="store")
+            jax.block_until_ready(state)
+            times["hop_store"].append(time.perf_counter() - t0)
+            del state
+
+            if "hop_xproc" in times:
+                dhp = DHP(nbs, "A")
+                state = make_state()
+                t0 = time.perf_counter()
+                ref = dhp.hop(state, "W", via="store")
+                times["hop_xproc"].append(time.perf_counter() - t0)
+                nbs.call("W", "svc/drop", token=ref.token)
     finally:
+        if sup is not None:
+            sup.shutdown()
         shutil.rmtree(root, ignore_errors=True)
+    t_live = statistics.median(times["hop_live"])
+    rows = [("hop_live", t_live * 1e6, f"{nbytes/t_live/1e9:.2f}GB/s")]
+    for key in ("hop_store", "hop_xproc"):
+        if key not in times:
+            continue
+        t = statistics.median(times[key])
+        rows.append(
+            (key, t * 1e6,
+             f"{nbytes/t/1e9:.2f}GB/s store/live={t/max(t_live,1e-9):.1f}x")
+        )
     return rows

@@ -1,9 +1,16 @@
 """Elastic spot migration: lose half the cluster mid-training, keep going.
 
-A training job starts on a 4×2 (data×model) mesh. At step 12 the spot market
-reclaims the instance; the replacement is SMALLER — a 2×2 mesh. The CMI's
-sharding records remap by axis name (divisibility-checked), so the same job
-resumes on the new topology without any user code.
+Part 1 — in-process reclaim simulation: a training job starts on a 4×2
+(data×model) mesh. At step 12 the spot market reclaims the instance; the
+replacement is SMALLER — a 2×2 mesh. The CMI's sharding records remap by
+axis name (divisibility-checked), so the same job resumes on the new
+topology without any user code.
+
+Part 2 — the process fabric makes the reclaim REAL: a worker runs in its own
+OS process and the supervisor kills it with SIGKILL (a no-notice spot
+reclaim) mid-job. A fresh process restores from the last published CMI and
+finishes the job; the jobstore on the shared filesystem is the only medium
+the two incarnations ever share.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/spot_migration.py
@@ -30,3 +37,26 @@ loss = train.main([
     "--seq-len", "64", "--batch", "8",
 ])
 print(f"\nfinal loss after elastic 8→4 chip migration: {loss:.4f}")
+
+# -- Part 2: process-per-node fabric, SIGKILL reclaim ------------------------
+from repro.core.jobstore import STATUS_FINISHED, JobStore  # noqa: E402
+from repro.core.preemption import SpotSchedule  # noqa: E402
+from repro.fabric.supervisor import FabricSupervisor  # noqa: E402
+
+fab_store = tempfile.mkdtemp(prefix="navp-fabric-")
+job_root = tempfile.mkdtemp(prefix="navp-fabric-jobs-")
+jobstore = JobStore(job_root)
+job = jobstore.create_job({"seed": 11, "n": 4096, "steps": 40, "publish_every": 8})
+with FabricSupervisor(fab_store, job_root) as sup:
+    out = sup.run_job(
+        job.job_id,
+        schedule=SpotSchedule(preempt_steps=(16,), max_preemptions=1),
+        notice=False,  # SIGKILL: no 2-minute warning, the process just dies
+        steps=40, publish_every=8, step_ms=20, timeout_s=300,
+    )
+finished = jobstore.wait_for_status(job.job_id, STATUS_FINISHED, timeout_s=10)
+print(
+    f"fabric job {job.job_id}: {finished.status} at step {finished.step} "
+    f"after {out['reclaims']} SIGKILL reclaim(s), "
+    f"{out['incarnations']} worker process(es); product={finished.product}"
+)

@@ -25,8 +25,8 @@ Two utilities around checkpoint/restart:
 from __future__ import annotations
 
 import queue
+import shutil
 import threading
-import time
 import uuid
 from typing import Any
 
@@ -70,7 +70,7 @@ class DHP:
         self._worker: threading.Thread | None = None
         self._q: queue.Queue = queue.Queue()
         self._pending = 0
-        self._pending_lock = threading.Lock()
+        self._cv = threading.Condition()
         self._errors: list[Exception] = []
 
     # ------------------------------------------------------------------
@@ -102,7 +102,13 @@ class DHP:
             options=SaveOptions(chunk_bytes=self.chunk_bytes, writers=self.writers),
         )
         del state  # (4) "exit": the source's copy is gone
-        out = self.nbs.call(dest, "svc/hop", cmi=name)
+        try:
+            out = self.nbs.call(dest, "svc/hop", cmi=name, io_threads=self.io_threads)
+        except Exception:
+            # the destination normally GCs the transit CMI after restoring;
+            # if the call failed, clean it up here or retries leak the store
+            shutil.rmtree(self.nbs.hop_root / name, ignore_errors=True)
+            raise
         self.node = dest
         logger.info("hop(store) %s -> %s via %s", src, dest, name)
         return out
@@ -156,6 +162,7 @@ class DHP:
                 save_cmi(
                     self.jobstore.cmi_root(job_id), name, product, step=step,
                     meta={"kind": "product", **(meta or {})},
+                    options=SaveOptions(chunk_bytes=self.chunk_bytes, writers=self.writers),
                 )
             self.jobstore.svc_publish_job(job_id, STATUS_FINISHED, product=name, step=step)
             self.nbs.plugins.emit("on_publish", job_id=job_id, status=status, name=name)
@@ -196,41 +203,57 @@ class DHP:
     # ------------------------------------------------------------------
     # async machinery
     # ------------------------------------------------------------------
+    _SENTINEL = object()
+
     def _submit(self, fn, *args) -> None:
-        if self._worker is None or not self._worker.is_alive():
-            self._worker = threading.Thread(target=self._drain, daemon=True)
-            self._worker.start()
-        with self._pending_lock:
+        # Count the task BEFORE enqueueing so flush() can never observe a
+        # moment where the queue holds work but _pending reads 0.
+        with self._cv:
             self._pending += 1
+            if self._worker is None:
+                self._worker = threading.Thread(
+                    target=self._drain, name="dhp-publish", daemon=True
+                )
+                self._worker.start()
         self._q.put((fn, args))
 
     def _drain(self) -> None:
+        # Persistent worker: blocks on the queue until close() posts the
+        # sentinel. The old incarnation exited on a 0.25s queue timeout,
+        # racing _submit's is_alive() check — a task enqueued into the dying
+        # thread sat unserved until flush() timed out.
         while True:
-            try:
-                fn, args = self._q.get(timeout=0.25)
-            except queue.Empty:
+            item = self._q.get()
+            if item is self._SENTINEL:
                 return
+            fn, args = item
             try:
                 fn(*args)
             except Exception as e:  # surfaced at flush()
                 self._errors.append(e)
                 logger.exception("async publish failed")
             finally:
-                with self._pending_lock:
+                with self._cv:
                     self._pending -= 1
+                    if self._pending == 0:
+                        self._cv.notify_all()
 
     def flush(self, timeout: float = 300.0) -> None:
         """Join all in-flight async publishes; re-raise the first failure."""
-        deadline = time.time() + timeout
-        while True:
-            with self._pending_lock:
-                if self._pending == 0:
-                    break
-            if time.time() > deadline:
+        with self._cv:
+            if not self._cv.wait_for(lambda: self._pending == 0, timeout=timeout):
                 raise TimeoutError("async publish did not drain")
-            time.sleep(0.005)
         if self._errors:
             raise self._errors.pop(0)
+
+    def close(self, timeout: float = 300.0) -> None:
+        """Drain pending publishes and retire the worker thread."""
+        self.flush(timeout=timeout)
+        with self._cv:
+            worker, self._worker = self._worker, None
+        if worker is not None:
+            self._q.put(self._SENTINEL)
+            worker.join(timeout=timeout)
 
 
 def _reshard_tree(state: Any, resolver) -> Any:

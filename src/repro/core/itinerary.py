@@ -21,7 +21,19 @@ from typing import Any, Callable
 
 from repro.core.dhp import DHP
 from repro.core.jobstore import STATUS_CKPT
+from repro.core.nbs import RemoteStateRef
 from repro.utils import logger
+
+
+def _require_local(state: Any, dest: str) -> Any:
+    if isinstance(state, RemoteStateRef):
+        raise NotImplementedError(
+            f"stage destination {dest!r} is a process-backed node: the hop "
+            "returned a RemoteStateRef receipt, and itineraries cannot run "
+            "stage functions on remote state yet (see ROADMAP: remote "
+            "itineraries via svc/hop->svc/fetch chaining)"
+        )
+    return state
 
 
 @dataclass
@@ -43,20 +55,33 @@ class Itinerary:
         for i in range(start_stage, len(stages)):
             st = stages[i]
             if self.dhp.node != st.dest:
-                state = self.dhp.hop(state, st.dest, step=step0 + i)
+                state = _require_local(self.dhp.hop(state, st.dest, step=step0 + i), st.dest)
             state = st.fn(state)
             self.trace.append((st.name or f"stage{i}", self.dhp.node))
             if st.publish and self.job_id is not None:
                 # record which stage completed so restart skips finished work
-                pub_state = dict(state) if isinstance(state, dict) else {"state": state}
-                pub_state = {**pub_state, "itinerary_stage": i + 1}
+                if isinstance(state, dict):
+                    pub_state = {**state, "itinerary_stage": i + 1}
+                else:
+                    # non-dict states ride in a marked wrapper that resume()
+                    # unwraps, so the itinerary continues with the original
+                    # state rather than the bookkeeping dict
+                    pub_state = {
+                        "state": state,
+                        "itinerary_stage": i + 1,
+                        "itinerary_wrapped": True,
+                    }
                 self.dhp.publish(self.job_id, STATUS_CKPT, pub_state, step=step0 + i)
         return state
 
     def resume(self, stages: list[Stage]) -> Any:
         """Restart an interrupted itinerary from its last published stage."""
         state, _ = self.dhp.restart(self.job_id)
-        start = int(state.pop("itinerary_stage", 0)) if isinstance(state, dict) else 0
+        start = 0
+        if isinstance(state, dict):
+            start = int(state.pop("itinerary_stage", 0))
+            if state.pop("itinerary_wrapped", False):
+                state = state["state"]
         logger.info("itinerary resume at stage %d/%d", start, len(stages))
         return self.run(state, stages, start_stage=start)
 
@@ -84,7 +109,7 @@ class MobilePipeline:
                     if cur is None:
                         cur = items[item_idx]
                     if self.dhp.node != st.dest:
-                        cur = self.dhp.hop(cur, st.dest, step=tick)
+                        cur = _require_local(self.dhp.hop(cur, st.dest, step=tick), st.dest)
                     cur = st.fn(cur)
                     active.append((item_idx, st.name or f"stage{stage_idx}"))
                     if stage_idx == s - 1:

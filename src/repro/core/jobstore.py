@@ -197,12 +197,30 @@ class JobStore:
                 self._update(job, f"publish:ckpt:{cmi}")
             else:
                 job.product = product
+                if step is not None:
+                    job.step = step
                 job.status = STATUS_FINISHED
                 job.lease_owner = None
                 self._update(job, f"publish:finished:{product}")
         if status == STATUS_CKPT:
             self.gc_cmis(job_id, keep_last=keep_last)
         return job
+
+    def wait_for_status(
+        self, job_id: str, status: str, *, timeout_s: float = 60.0, poll_s: float = 0.05
+    ) -> Job:
+        """Block until ``job_id`` reaches ``status`` (supervisors watching
+        workers in other processes; the store is the only shared medium)."""
+        deadline = time.monotonic() + timeout_s
+        while True:
+            job = self.read_job(job_id)
+            if job.status == status:
+                return job
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"job {job_id} still {job.status!r}, wanted {status!r} after {timeout_s}s"
+                )
+            time.sleep(poll_s)
 
     def release(self, job_id: str, *, to_status: str | None = None) -> Job:
         with self._lock(job_id):

@@ -20,6 +20,7 @@ so fronting them with RPC is mechanical.
 from __future__ import annotations
 
 import os
+import shutil
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Callable
@@ -33,6 +34,21 @@ from repro.utils import logger
 HOP_NAMESPACE = "hops"
 
 
+@dataclass(frozen=True)
+class RemoteStateRef:
+    """Receipt for state resident in another process after a remote svc/hop.
+
+    Lives in core (not ``repro.fabric``) so state-consuming layers like
+    itineraries can recognize "your state went somewhere you cannot touch
+    it" without importing the fabric.
+    """
+
+    node: str
+    token: str
+    step: int
+    leaves: int
+
+
 @dataclass
 class Node:
     """A compute node: named mesh + services (a Cloud instance analogue)."""
@@ -44,6 +60,19 @@ class Node:
 
     def register(self, svc_name: str, handler: Callable) -> None:
         self.services[svc_name] = handler
+
+    def invoke(self, svc_name: str, /, **kwargs) -> Any:
+        """Dispatch a service call on this node.
+
+        Subclasses (``repro.fabric.proxy.RemoteNode``) override this to carry
+        the call across a process boundary; ``NBS.call`` goes through here so
+        callers never care which backend a node runs on.
+        """
+        try:
+            handler = self.services[svc_name]
+        except KeyError:
+            raise KeyError(f"node {self.name!r} has no service {svc_name!r}") from None
+        return handler(**kwargs)
 
 
 class NBS:
@@ -64,9 +93,28 @@ class NBS:
         self.nodes[name] = node
         return node
 
+    def add_remote_node(self, name: str, address, **meta) -> Node:
+        """Register a node served by another process (see ``repro.fabric``).
+
+        ``address`` is a fabric address tuple — ``("unix", path)`` or
+        ``("tcp", host, port)``. Calls through ``nbs.call`` are carried over
+        the socket; store-mediated hops work unchanged because the store is a
+        shared filesystem.
+        """
+        from repro.fabric.proxy import RemoteNode  # lazy: core stays fabric-free
+
+        if name in self.nodes:
+            raise ValueError(f"node {name!r} already registered")
+        node = RemoteNode.connect(name, address, meta=meta)
+        self.nodes[name] = node
+        return node
+
     def remove_node(self, name: str) -> None:
         """A spot reclaim: the node vanishes; in-flight work must re-hop."""
-        self.nodes.pop(name, None)
+        node = self.nodes.pop(name, None)
+        close = getattr(node, "close", None)
+        if callable(close):
+            close()
         logger.info("node %s reclaimed", name)
 
     def node(self, name: str) -> Node:
@@ -77,23 +125,30 @@ class NBS:
 
     # -- service call ------------------------------------------------------
     def call(self, node_name: str, svc_name: str, /, **kwargs) -> Any:
-        node = self.node(node_name)
-        try:
-            handler = node.services[svc_name]
-        except KeyError:
-            raise KeyError(f"node {node_name!r} has no service {svc_name!r}") from None
-        return handler(**kwargs)
+        return self.node(node_name).invoke(svc_name, **kwargs)
 
     # -- default services ----------------------------------------------------
     def _install_default_services(self, node: Node) -> None:
         def svc_ping() -> dict:
             return {"node": node.name, "mesh": None if node.mesh is None else list(node.mesh.devices.shape)}
 
-        def svc_hop(cmi: str, store_root: str | None = None) -> Any:
-            """Figure 4: restore the named CMI onto this node's mesh."""
+        def svc_hop(
+            cmi: str,
+            store_root: str | None = None,
+            io_threads: int = 0,
+            gc: bool = True,
+        ) -> Any:
+            """Figure 4: restore the named CMI onto this node's mesh.
+
+            Hop CMIs are transit baggage, not published products: once the
+            state is live on this node the image is deleted (``gc=False`` to
+            keep it), else long itineraries grow the store without bound.
+            """
             root = Path(store_root) if store_root else self.store_root / HOP_NAMESPACE
-            state, manifest = restore_cmi(root, cmi, mesh=node.mesh)
+            state, manifest = restore_cmi(root, cmi, mesh=node.mesh, io_threads=io_threads)
             self.plugins.emit("on_restart", node=node.name, cmi=cmi, step=manifest.step)
+            if gc:
+                shutil.rmtree(root / cmi, ignore_errors=True)
             logger.info("svc/hop: restored %s on node %s (step %d)", cmi, node.name, manifest.step)
             return state
 

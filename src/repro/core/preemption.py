@@ -75,11 +75,14 @@ class SpotSchedule:
         self._rng = np.random.default_rng(self.seed)
 
     def should_preempt(self, step: int) -> bool:
+        # Draw the hazard unconditionally (one draw per call whenever a
+        # hazard is configured): short-circuiting on preempt_steps or the
+        # budget would make the RNG stream depend on which steps hit, so two
+        # schedules sharing a seed would diverge after the first difference.
+        hazard_hit = self.hazard_per_step > 0 and self._rng.random() < self.hazard_per_step
         if self._count >= self.max_preemptions:
             return False
-        hit = step in self.preempt_steps or (
-            self.hazard_per_step > 0 and self._rng.random() < self.hazard_per_step
-        )
+        hit = step in self.preempt_steps or hazard_hit
         if hit:
             self._count += 1
         return hit

@@ -1,0 +1,26 @@
+"""NavP process fabric — per-node worker processes behind real RPC.
+
+Modules:
+  wire        Length-prefixed JSON/msgpack frames over unix/TCP sockets.
+  server      NodeServer: serves one node's services (svc/ping, svc/hop,
+              svc/fetch, the three jobstore services) from inside a worker.
+  proxy       FabricClient + RemoteNode: ``nbs.call`` across the boundary.
+  worker      ``python -m repro.fabric.worker`` — the process entrypoint,
+              with the Figure-7 job loop and real SIGTERM notice handling.
+  supervisor  FabricSupervisor: spawn/monitor/reclaim/replace workers;
+              SpotSchedule-driven SIGTERM (2-min notice) and SIGKILL
+              (no-notice) reclaims.
+
+The in-process :class:`~repro.core.nbs.Node` stays the default backend;
+this package is opt-in per node via ``NBS.add_remote_node`` or the
+supervisor. Hops between process-backed nodes are store-mediated only —
+the live-reshard fast path needs a shared device mesh and stays in-process.
+"""
+
+from repro.fabric.proxy import FabricClient, RemoteNode, RemoteStateRef, wait_ready  # noqa: F401
+from repro.fabric.server import NodeServer  # noqa: F401
+from repro.fabric.supervisor import FabricSupervisor, WorkerHandle  # noqa: F401
+
+# NOTE: repro.fabric.worker is deliberately NOT imported here — it is the
+# ``python -m repro.fabric.worker`` entrypoint, and importing it from the
+# package __init__ would trip runpy's double-import warning in every spawn.

@@ -1,0 +1,108 @@
+"""Client side of the fabric: FabricClient + the RemoteNode proxy.
+
+``RemoteNode`` subclasses :class:`~repro.core.nbs.Node` and overrides
+``invoke`` so ``nbs.call(dest, svc, **kwargs)`` transparently crosses the
+process boundary. Store-mediated hops work unchanged — the CMI travels
+through the shared store; only the *request* ("restore hops/<name> onto your
+mesh") rides the socket. ``svc/hop`` against a remote node therefore returns
+a :class:`RemoteStateRef` receipt instead of live state: the state is now
+resident in the worker process, which is the entire point of navigating the
+computation to the data.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.core.nbs import Node, RemoteStateRef  # noqa: F401  (re-export)
+from repro.fabric import wire
+from repro.utils import logger
+
+
+class FabricClient:
+    """One connection to a NodeServer; thread-safe request/response."""
+
+    def __init__(self, address):
+        self.address = tuple(address)
+        self._sock = wire.connect(self.address)
+        self._lock = threading.Lock()
+        self._next_id = 0
+
+    def request(self, svc: str, **kwargs) -> Any:
+        with self._lock:
+            self._next_id += 1
+            rid = self._next_id
+            wire.send_msg(self._sock, {"id": rid, "svc": svc, "kwargs": kwargs})
+            resp = wire.recv_msg(self._sock)
+        if not isinstance(resp, dict) or resp.get("id") != rid:
+            raise wire.WireError(f"out-of-order response: {resp!r}")
+        if resp.get("ok"):
+            return resp.get("result")
+        raise wire.RemoteError(resp.get("error", "remote failure"), resp.get("traceback", ""))
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+def wait_ready(address, timeout: float = 60.0, poll_s: float = 0.1) -> dict:
+    """Poll svc/ping until the server answers (worker startup ≈ jax import)."""
+    deadline = time.monotonic() + timeout
+    last: Exception | None = None
+    while time.monotonic() < deadline:
+        try:
+            with FabricClient(address) as c:
+                return c.request("svc/ping")
+        except (OSError, wire.WireError) as e:
+            last = e
+            time.sleep(poll_s)
+    raise TimeoutError(f"no fabric server at {address} after {timeout}s: {last}")
+
+
+@dataclass
+class RemoteNode(Node):
+    """A Node whose services live in another process."""
+
+    client: FabricClient | None = None
+    _hop_wrap: bool = field(default=True, repr=False)
+
+    @classmethod
+    def connect(cls, name: str, address, *, meta: dict | None = None) -> "RemoteNode":
+        client = FabricClient(address)
+        info = client.request("svc/ping")
+        node = cls(name=name, mesh=None, meta={**(meta or {}), "pid": info.get("pid")},
+                   client=client)
+        logger.info("connected remote node %s at %s (pid %s)", name, tuple(address),
+                    info.get("pid"))
+        return node
+
+    def invoke(self, svc_name: str, /, **kwargs) -> Any:
+        if self.client is None:
+            raise RuntimeError(f"remote node {self.name!r} is not connected")
+        result = self.client.request(svc_name, **kwargs)
+        if self._hop_wrap and svc_name == "svc/hop" and isinstance(result, dict) \
+                and "token" in result:
+            return RemoteStateRef(
+                node=result.get("node", self.name),
+                token=result["token"],
+                step=int(result.get("step", 0)),
+                leaves=int(result.get("leaves", 0)),
+            )
+        return result
+
+    def close(self) -> None:
+        if self.client is not None:
+            self.client.close()
+            self.client = None

@@ -1,0 +1,213 @@
+"""NodeServer: serves one NBS node's services over a socket.
+
+This is the "fronting them with RPC is mechanical" promise from
+``core/nbs.py`` and ``core/jobstore.py`` made real. A worker process builds a
+single-node :class:`~repro.core.nbs.NBS` (whose store root is the *shared*
+filesystem — the S3 analogue) plus an optional :class:`JobStore`, then serves:
+
+    svc/ping          liveness + identity (pid, resident-state count)
+    svc/hop           restore a CMI from the shared store onto this node;
+                      the live state becomes *resident* here and the caller
+                      gets a receipt {token, step, leaves} — bulk data never
+                      crosses the control wire (Fig. 3: the CMI moved through
+                      the store)
+    svc/fetch         re-publish a resident state into the store as a fresh
+                      CMI so another node can hop it onward
+    svc/drop          discard a resident state
+    svc/list_jobs     ┐
+    svc/get_job       ├ the paper's three job services (§3.3), job records
+    svc/publish_job   ┘ as plain JSON dicts
+    svc/shutdown      stop serving (graceful supervisor path)
+
+Requests are ``{"id": n, "svc": name, "kwargs": {...}}``; responses
+``{"id": n, "ok": true, "result": ...}`` or ``{"id": n, "ok": false,
+"error": msg, "traceback": text}``. One thread per connection — fabric
+fan-in is a handful of peers, not a web tier.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import traceback
+import uuid
+from typing import Any
+
+from repro.core.jobstore import JobStore
+from repro.core.nbs import NBS
+from repro.fabric import wire
+from repro.utils import logger
+
+
+class NodeServer:
+    def __init__(
+        self,
+        nbs: NBS,
+        node_name: str,
+        address,
+        *,
+        jobstore: JobStore | None = None,
+    ):
+        self.nbs = nbs
+        self.node_name = node_name
+        self.jobstore = jobstore
+        self.resident: dict[str, tuple[Any, int]] = {}  # token -> (state, step)
+        self._listener, self.address = wire.listen(address)
+        self._stop = threading.Event()
+        self._accept_thread: threading.Thread | None = None
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "NodeServer":
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="fabric-accept", daemon=True
+        )
+        self._accept_thread.start()
+        logger.info("fabric node %s serving on %s", self.node_name, self.address)
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        if self.address[0] == "unix":
+            try:
+                os.unlink(self.address[1])
+            except OSError:
+                pass
+
+    def serve_forever(self, poll_s: float = 0.2, until=None) -> None:
+        """Block until svc/shutdown — or ``until()`` returns truthy (a
+        serve-only worker passes its PreemptionNotice flag here, so a
+        SIGTERM reclaim still terminates it)."""
+        while not self._stop.wait(poll_s):
+            if until is not None and until():
+                return
+
+    # -- transport ---------------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except OSError:
+                return  # listener closed
+            threading.Thread(
+                target=self._serve_conn, args=(conn,), name="fabric-conn", daemon=True
+            ).start()
+
+    def _serve_conn(self, conn) -> None:
+        with conn:
+            while not self._stop.is_set():
+                try:
+                    req = wire.recv_msg(conn)
+                except wire.WireError:
+                    return  # peer hung up
+                resp = self._dispatch(req)
+                try:
+                    payload = wire.encode(resp)
+                except Exception as e:
+                    # a service returned something non-wire-serializable
+                    # (e.g. an array from a passthrough handler): tell the
+                    # caller which call failed instead of dropping the line
+                    payload = wire.encode({
+                        "id": resp.get("id"),
+                        "ok": False,
+                        "error": f"unserializable result: {type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc(),
+                    })
+                try:
+                    conn.sendall(payload)
+                except OSError:
+                    return
+
+    # -- dispatch ----------------------------------------------------------
+    def _dispatch(self, req: Any) -> dict:
+        rid = req.get("id") if isinstance(req, dict) else None
+        try:
+            if not isinstance(req, dict) or "svc" not in req:
+                raise ValueError(f"malformed request: {req!r}")
+            svc = req["svc"]
+            kwargs = dict(req.get("kwargs") or {})
+            result = self._invoke(svc, kwargs)
+            return {"id": rid, "ok": True, "result": result}
+        except Exception as e:
+            return {
+                "id": rid,
+                "ok": False,
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc(),
+            }
+
+    def _invoke(self, svc: str, kwargs: dict) -> Any:
+        if svc == "svc/ping":
+            base = self.nbs.call(self.node_name, "svc/ping")
+            return {**base, "pid": os.getpid(), "resident": len(self.resident)}
+        if svc == "svc/hop":
+            return self._svc_hop(**kwargs)
+        if svc == "svc/fetch":
+            return self._svc_fetch(**kwargs)
+        if svc == "svc/drop":
+            return {"dropped": self.resident.pop(kwargs["token"], None) is not None}
+        if svc == "svc/shutdown":
+            self._stop.set()
+            return {"stopping": True}
+        if svc in ("svc/list_jobs", "svc/get_job", "svc/publish_job"):
+            return self._svc_jobstore(svc, kwargs)
+        # anything else the node registered locally (handlers must speak
+        # plain data for this to work — the service-shaped contract)
+        return self.nbs.call(self.node_name, svc, **kwargs)
+
+    # -- hop: the state lands HERE -----------------------------------------
+    def _svc_hop(self, cmi: str, store_root: str | None = None, io_threads: int = 0,
+                 gc: bool = True) -> dict:
+        import jax
+
+        state = self.nbs.call(
+            self.node_name, "svc/hop",
+            cmi=cmi, store_root=store_root, io_threads=io_threads, gc=gc,
+        )
+        token = f"res-{uuid.uuid4().hex[:12]}"
+        leaves = jax.tree_util.tree_leaves(state)
+        # step travels in the CMI manifest; svc/hop returns only state, so
+        # re-derive a display step from a conventional "step"/"t" leaf if any
+        step = 0
+        if isinstance(state, dict):
+            for key in ("step", "t"):
+                if key in state:
+                    try:
+                        step = int(state[key])
+                    except (TypeError, ValueError):
+                        pass
+                    break
+        self.resident[token] = (state, step)
+        return {"token": token, "step": step, "leaves": len(leaves), "node": self.node_name}
+
+    def _svc_fetch(self, token: str, name: str | None = None, drop: bool = True) -> dict:
+        from repro.checkpoint.serializer import SaveOptions
+        from repro.core.cmi import save_cmi
+
+        if token not in self.resident:
+            raise KeyError(f"no resident state {token!r}")
+        state, step = self.resident[token]
+        name = name or f"hop-{uuid.uuid4().hex[:12]}"
+        save_cmi(
+            self.nbs.hop_root, name, state, step=step,
+            meta={"src": self.node_name, "resident": token},
+            options=SaveOptions(writers=1),
+        )
+        if drop:
+            self.resident.pop(token, None)
+        return {"cmi": name, "step": step}
+
+    # -- jobstore services --------------------------------------------------
+    def _svc_jobstore(self, svc: str, kwargs: dict) -> Any:
+        if self.jobstore is None:
+            raise RuntimeError(f"node {self.node_name} serves no jobstore")
+        if svc == "svc/list_jobs":
+            return self.jobstore.svc_list_jobs()
+        if svc == "svc/get_job":
+            job = self.jobstore.svc_get_job(**kwargs)
+            return None if job is None else job.to_json()
+        job = self.jobstore.svc_publish_job(**kwargs)
+        return job.to_json()

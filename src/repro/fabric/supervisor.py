@@ -1,0 +1,271 @@
+"""FabricSupervisor: spawn, watch, reclaim, and replace worker processes.
+
+This is the Spot-on shape (PAPERS: *Spot-on*, 2022): a supervisor outside the
+computation drives real OS signals at it and re-provisions instances, while
+the application's own checkpoint discipline (publish at chosen points) makes
+the kills survivable — *Checkpointing as a Service* rendered as a local
+process fabric.
+
+Reclaim paths, both real:
+
+* ``notice=True``  -> SIGTERM. The worker's ``PreemptionNotice`` flag flips,
+  it finishes the current step, publishes a CMI, exits ``EXIT_PREEMPTED``.
+* ``notice=False`` -> SIGKILL. No flag, no flush, the process is gone. The
+  next incarnation restores from the last *committed* CMI.
+
+``run_job`` is the supervision loop: it watches the jobstore for published
+progress, consults a :class:`SpotSchedule` once per newly observed step, and
+replaces reclaimed workers until the job publishes "finished".
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+import uuid
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import repro
+from repro.core.jobstore import STATUS_FINISHED, JobStore
+from repro.core.preemption import SpotSchedule
+from repro.fabric.proxy import wait_ready
+from repro.utils import logger
+
+_SRC_DIR = str(Path(repro.__file__).resolve().parent.parent)
+
+
+@dataclass
+class WorkerHandle:
+    name: str
+    proc: subprocess.Popen
+    address: tuple
+    ready_file: str
+
+    @property
+    def pid(self) -> int:
+        return self.proc.pid
+
+    def alive(self) -> bool:
+        return self.proc.poll() is None
+
+    def wait(self, timeout: float | None = None) -> int:
+        return self.proc.wait(timeout=timeout)
+
+
+@dataclass
+class FabricSupervisor:
+    store_root: str
+    jobstore_root: str | None = None
+    python: str = sys.executable
+    spawn_timeout_s: float = 90.0
+    socket_dir: str = ""
+    workers: dict[str, WorkerHandle] = field(default_factory=dict)
+    incarnations: int = 0
+
+    def __post_init__(self) -> None:
+        if not self.socket_dir:
+            # unix socket paths are capped at ~107 bytes; pytest tmp dirs can
+            # blow that, so sockets live in their own short-lived /tmp dir
+            self.socket_dir = tempfile.mkdtemp(prefix="navp-fab-")
+
+    # -- spawn / reclaim ----------------------------------------------------
+    def spawn(
+        self,
+        name: str,
+        *,
+        job_id: str | None = None,
+        claim: bool = False,
+        steps: int = 50,
+        publish_every: int = 10,
+        step_ms: float = 0.0,
+        lease_s: float = 60.0,
+        grace_s: float = 120.0,
+        serve_only: bool = False,
+        wait: bool = True,
+        extra_args: list[str] | None = None,
+    ) -> WorkerHandle:
+        """Provision a worker process and (unless ``wait=False``) wait for
+        its server to answer. ``wait=False`` suits racing claimants that may
+        legitimately exit before ever being pinged."""
+        os.makedirs(self.socket_dir, exist_ok=True)
+        sock = os.path.join(self.socket_dir, f"{name}-{uuid.uuid4().hex[:6]}.sock")
+        ready = sock + ".ready"
+        cmd = [
+            self.python, "-m", "repro.fabric.worker",
+            "--name", name,
+            "--store", str(self.store_root),
+            "--socket", sock,
+            "--ready-file", ready,
+            "--steps", str(steps),
+            "--publish-every", str(publish_every),
+            "--step-ms", str(step_ms),
+            "--lease-s", str(lease_s),
+            "--grace-s", str(grace_s),
+        ]
+        if self.jobstore_root:
+            cmd += ["--jobstore", str(self.jobstore_root)]
+        if job_id is not None:
+            cmd += ["--job-id", str(job_id)]
+        if claim:
+            cmd += ["--claim"]
+        if serve_only:
+            cmd += ["--serve-only"]
+        cmd += extra_args or []
+        env = dict(os.environ)
+        env["PYTHONPATH"] = _SRC_DIR + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+        )
+        # workers are host-CPU nodes; keep their jax single-device and quiet
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        proc = subprocess.Popen(cmd, env=env)
+        address = ("unix", sock)
+        if wait:
+            try:
+                wait_ready(address, timeout=self.spawn_timeout_s)
+            except TimeoutError:
+                if proc.poll() is not None:
+                    raise RuntimeError(
+                        f"worker {name} died during startup (rc={proc.returncode})"
+                    ) from None
+                proc.kill()
+                try:
+                    proc.wait(timeout=10)  # reap: no zombies on retry loops
+                except subprocess.TimeoutExpired:
+                    pass
+                raise
+        handle = WorkerHandle(name=name, proc=proc, address=address, ready_file=ready)
+        self.workers[name] = handle
+        self.incarnations += 1
+        logger.info("spawned worker %s pid=%d on %s", name, proc.pid, address)
+        return handle
+
+    def reclaim(self, name: str, *, notice: bool = True, wait_s: float = 60.0) -> int:
+        """Take the instance away. notice=True: SIGTERM; False: SIGKILL."""
+        handle = self.workers[name]
+        sig = signal.SIGTERM if notice else signal.SIGKILL
+        logger.warning("reclaiming worker %s pid=%d via %s", name, handle.pid, sig.name)
+        try:
+            handle.proc.send_signal(sig)
+        except ProcessLookupError:
+            pass
+        rc = handle.wait(timeout=wait_s)
+        self.workers.pop(name, None)
+        return rc
+
+    def shutdown(self) -> None:
+        for name in list(self.workers):
+            handle = self.workers.pop(name)
+            if handle.alive():
+                handle.proc.kill()
+                try:
+                    handle.wait(timeout=10)
+                except subprocess.TimeoutExpired:
+                    pass
+        shutil.rmtree(self.socket_dir, ignore_errors=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        return False
+
+    # -- supervision loop ---------------------------------------------------
+    def run_job(
+        self,
+        job_id: str,
+        *,
+        schedule: SpotSchedule | None = None,
+        notice: bool = True,
+        steps: int = 50,
+        publish_every: int = 5,
+        step_ms: float = 5.0,
+        grace_s: float = 120.0,
+        max_restarts: int = 16,
+        poll_s: float = 0.05,
+        timeout_s: float = 600.0,
+    ) -> dict:
+        """Drive ``job_id`` to "finished" across real reclaims.
+
+        Returns ``{"incarnations": n, "reclaims": m, "job": job_dict}``.
+        """
+        if not self.jobstore_root:
+            raise RuntimeError("run_job requires a jobstore_root")
+        store = JobStore(self.jobstore_root)
+        deadline = time.monotonic() + timeout_s
+        reclaims = 0
+        incarnation = 0
+        seen_step = -1
+        name = f"w{uuid.uuid4().hex[:4]}-0"
+        self.spawn(
+            name, job_id=job_id, steps=steps, publish_every=publish_every,
+            step_ms=step_ms, grace_s=grace_s,
+        )
+        while True:
+            if time.monotonic() > deadline:
+                self.shutdown()
+                raise TimeoutError(f"job {job_id} did not finish in {timeout_s}s")
+            job = store.read_job(job_id)
+            if job.status == STATUS_FINISHED:
+                if name in self.workers:
+                    try:
+                        self.workers[name].wait(timeout=30)
+                    except subprocess.TimeoutExpired:
+                        pass
+                    self.workers.pop(name, None)
+                return {
+                    "incarnations": incarnation + 1,
+                    "reclaims": reclaims,
+                    "job": job.to_json(),
+                }
+            # consult the spot market once per newly published step
+            if schedule is not None and job.step > seen_step:
+                preempt = False
+                for s in range(seen_step + 1, job.step + 1):
+                    if schedule.should_preempt(s):
+                        preempt = True
+                seen_step = job.step
+                if preempt and name in self.workers:
+                    self.reclaim(name, notice=notice)
+                    reclaims += 1
+                    if incarnation >= max_restarts:
+                        raise RuntimeError(f"exceeded {max_restarts} restarts")
+                    incarnation += 1
+                    name = f"{name.rsplit('-', 1)[0]}-{incarnation}"
+                    self.spawn(
+                        name, job_id=job_id, steps=steps,
+                        publish_every=publish_every, step_ms=step_ms, grace_s=grace_s,
+                    )
+                    continue
+            handle = self.workers.get(name)
+            if handle is not None and not handle.alive():
+                rc = handle.proc.returncode
+                self.workers.pop(name, None)
+                job = store.read_job(job_id)
+                if job.status == STATUS_FINISHED:
+                    continue  # loop top records the finish
+                # died (preempted externally or crashed): re-provision
+                logger.warning("worker %s exited rc=%s; re-provisioning", name, rc)
+                if incarnation >= max_restarts:
+                    raise RuntimeError(f"exceeded {max_restarts} restarts")
+                incarnation += 1
+                name = f"{name.rsplit('-', 1)[0]}-{incarnation}"
+                self.spawn(
+                    name, job_id=job_id, steps=steps,
+                    publish_every=publish_every, step_ms=step_ms, grace_s=grace_s,
+                )
+            time.sleep(poll_s)
+
+    # -- helpers ------------------------------------------------------------
+    @staticmethod
+    def read_ready(ready_file: str) -> dict:
+        d = json.loads(Path(ready_file).read_text())
+        d["address"] = tuple(d["address"])
+        return d

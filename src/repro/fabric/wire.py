@@ -1,0 +1,165 @@
+"""Wire protocol for the NavP fabric: length-prefixed frames over sockets.
+
+Frame layout (everything big-endian)::
+
+    +----------------+-------+----------------------+
+    | u32 body length| codec | body (length-1 bytes)|
+    +----------------+-------+----------------------+
+
+``codec`` is one byte: ``J`` for JSON (UTF-8), ``M`` for msgpack. Each frame
+carries its own codec marker, so a msgpack-capable worker can talk to a
+JSON-only client in the same conversation. msgpack is used when importable
+(it handles ``bytes`` natively and is ~3x smaller for numeric payloads);
+otherwise JSON with a ``{"__bytes__": <base64>}`` escape.
+
+Payloads are *control-plane* data — service names, CMI names, job records,
+small numeric summaries. Bulk array data never crosses this wire: hops are
+store-mediated (the CMI travels through the shared filesystem / S3
+analogue), exactly like the paper's Figure 3/4 path.
+"""
+
+from __future__ import annotations
+
+import base64
+import json
+import socket
+import struct
+from typing import Any
+
+try:  # optional, baked into some images
+    import msgpack  # type: ignore
+
+    _HAVE_MSGPACK = True
+except Exception:  # pragma: no cover - exercised only without msgpack
+    msgpack = None
+    _HAVE_MSGPACK = False
+
+_LEN = struct.Struct(">I")
+CODEC_JSON = b"J"
+CODEC_MSGPACK = b"M"
+# Control-plane frames are small; anything past this is a corrupt length
+# prefix or a misdirected bulk transfer.
+MAX_FRAME = 256 << 20
+
+
+class WireError(ConnectionError):
+    """Framing/transport failure (peer died, short read, corrupt frame)."""
+
+
+class RemoteError(RuntimeError):
+    """A service raised on the remote side; carries the remote traceback."""
+
+    def __init__(self, message: str, remote_traceback: str = ""):
+        super().__init__(message)
+        self.remote_traceback = remote_traceback
+
+
+def _json_default(obj: Any) -> Any:
+    if isinstance(obj, (bytes, bytearray, memoryview)):
+        return {"__bytes__": base64.b64encode(bytes(obj)).decode("ascii")}
+    # numpy scalars (np.int64 step counters etc.) degrade to python scalars
+    item = getattr(obj, "item", None)
+    if callable(item):
+        return item()
+    raise TypeError(f"not wire-serializable: {type(obj)!r}")
+
+
+def _json_object_hook(d: dict) -> Any:
+    if set(d) == {"__bytes__"}:
+        return base64.b64decode(d["__bytes__"])
+    return d
+
+
+def encode(obj: Any, *, prefer_msgpack: bool = True) -> bytes:
+    """Serialize ``obj`` into a framed message (length + codec + body)."""
+    if _HAVE_MSGPACK and prefer_msgpack:
+        body = msgpack.packb(obj, use_bin_type=True, default=_json_default)
+        codec = CODEC_MSGPACK
+    else:
+        body = json.dumps(obj, default=_json_default).encode("utf-8")
+        codec = CODEC_JSON
+    if len(body) + 1 > MAX_FRAME:
+        raise WireError(f"frame too large: {len(body)} bytes")
+    return _LEN.pack(len(body) + 1) + codec + body
+
+
+def decode_body(codec: bytes, body: bytes) -> Any:
+    try:
+        if codec == CODEC_MSGPACK:
+            if not _HAVE_MSGPACK:
+                raise WireError("peer sent msgpack but msgpack is unavailable")
+            return msgpack.unpackb(body, raw=False)
+        if codec == CODEC_JSON:
+            return json.loads(body.decode("utf-8"), object_hook=_json_object_hook)
+    except WireError:
+        raise
+    except Exception as e:
+        # corrupt/truncated body must surface as a transport error, not kill
+        # a server connection thread with a raw JSONDecodeError
+        raise WireError(f"undecodable {codec!r} frame: {e}") from e
+    raise WireError(f"unknown codec byte {codec!r}")
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise WireError("connection closed mid-frame")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def send_msg(sock: socket.socket, obj: Any) -> None:
+    sock.sendall(encode(obj))
+
+
+def recv_msg(sock: socket.socket) -> Any:
+    (length,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
+    if length == 0 or length > MAX_FRAME:
+        raise WireError(f"bad frame length {length}")
+    payload = _recv_exact(sock, length)
+    return decode_body(payload[:1], payload[1:])
+
+
+# ---------------------------------------------------------------------------
+# addresses
+# ---------------------------------------------------------------------------
+
+
+def connect(address) -> socket.socket:
+    """Open a client socket to a fabric address.
+
+    ``("unix", path)`` or ``("tcp", host, port)``.
+    """
+    kind = address[0]
+    if kind == "unix":
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        sock.connect(address[1])
+    elif kind == "tcp":
+        sock = socket.create_connection((address[1], int(address[2])))
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    else:
+        raise ValueError(f"unknown address kind {kind!r}")
+    return sock
+
+
+def listen(address) -> tuple[socket.socket, tuple]:
+    """Bind+listen on a fabric address; returns (socket, resolved address).
+
+    ``("tcp", host, 0)`` resolves the ephemeral port in the returned address.
+    """
+    kind = address[0]
+    if kind == "unix":
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        sock.bind(address[1])
+        sock.listen(16)
+        return sock, ("unix", address[1])
+    if kind == "tcp":
+        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        sock.bind((address[1], int(address[2])))
+        sock.listen(16)
+        host, port = sock.getsockname()[:2]
+        return sock, ("tcp", host, port)
+    raise ValueError(f"unknown address kind {kind!r}")

@@ -1,0 +1,192 @@
+"""Fabric worker: one NBS node in its own OS process.
+
+``python -m repro.fabric.worker --name B --socket /tmp/b.sock --store S ...``
+
+The worker builds a single-node NBS over the *shared* store root (the
+filesystem plays S3), serves its services on a socket (:class:`NodeServer`),
+and — when given a job — runs the paper's Figure 7 worker loop:
+
+    get_job -> (restore from CMI if status=="ckpt") -> step loop
+            -> publish("ckpt") at application-chosen points
+            -> publish("finished") with the product
+
+Preemption is REAL here, not a raised exception:
+
+* SIGTERM is the cloud's 2-minute notice — ``PreemptionNotice.install_sigterm``
+  sets the flag, the loop finishes its current step, publishes a CMI, and
+  exits with :data:`EXIT_PREEMPTED`.
+* SIGKILL is a no-notice reclaim — the process dies mid-whatever. The
+  jobstore's fcntl locks and the CMI commit protocol are what make the next
+  incarnation's restore safe (an uncommitted CMI is never referenced by
+  ``job.cmi``).
+
+The demo computation is numpy double-precision and strictly deterministic,
+so a killed-and-resumed run must produce a bit-identical product to an
+uninterrupted one — the acceptance test of the whole fabric.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+from typing import Any
+
+import numpy as np
+
+from repro.core.dhp import DHP
+from repro.core.jobstore import STATUS_CKPT, STATUS_FINISHED, JobStore
+from repro.core.nbs import NBS
+from repro.core.preemption import PreemptionNotice
+from repro.fabric.server import NodeServer
+from repro.utils import logger
+
+EXIT_FINISHED = 0
+EXIT_PREEMPTED = 43  # graceful: notice honored, CMI published before exit
+EXIT_NO_JOB = 44
+
+
+# ---------------------------------------------------------------------------
+# the deterministic demo job (double precision => cross-process bit-stable)
+# ---------------------------------------------------------------------------
+
+
+def init_state(job_input: dict) -> dict[str, Any]:
+    rng = np.random.default_rng(int(job_input.get("seed", 0)))
+    n = int(job_input.get("n", 4096))
+    return {"w": rng.standard_normal(n), "t": 0}
+
+
+def job_step(state: dict[str, Any]) -> dict[str, Any]:
+    w, t = state["w"], int(state["t"])
+    w = w * 1.000001 + np.sin(w) * 1e-3 + (t % 7) * 1e-6
+    return {"w": w, "t": t + 1}
+
+
+def run_job_loop(
+    dhp: DHP,
+    jobstore: JobStore,
+    notice: PreemptionNotice,
+    *,
+    job_id: str | None,
+    worker_name: str,
+    steps: int,
+    publish_every: int,
+    step_ms: float,
+    lease_s: float,
+) -> int:
+    """Claim and run one job to completion (or graceful preemption exit)."""
+    job = jobstore.svc_get_job(job_id, worker=worker_name, lease_s=lease_s)
+    if job is None:
+        logger.info("worker %s: no claimable job", worker_name)
+        return EXIT_NO_JOB
+    if job.status == STATUS_FINISHED:
+        logger.info("worker %s: job %s already finished", worker_name, job.job_id)
+        return EXIT_FINISHED
+    if job.status == STATUS_CKPT and job.cmi is not None:
+        state, _ = dhp.restart(job.job_id)
+        logger.info(
+            "worker %s resumes job %s at t=%d from %s",
+            worker_name, job.job_id, int(state["t"]), job.cmi,
+        )
+    else:
+        state = init_state(job.input)
+    steps = int(job.input.get("steps", steps))
+    publish_every = int(job.input.get("publish_every", publish_every))
+    while int(state["t"]) < steps:
+        if notice.imminent():
+            # 2-minute-notice path: publish what we have and exit cleanly
+            dhp.publish(job.job_id, STATUS_CKPT, state, step=int(state["t"]))
+            dhp.flush()
+            logger.warning(
+                "worker %s preempted at t=%d (%.0fs grace left); published + exiting",
+                worker_name, int(state["t"]), notice.time_left(),
+            )
+            return EXIT_PREEMPTED
+        state = job_step(state)
+        if step_ms > 0:
+            time.sleep(step_ms / 1000.0)
+        t = int(state["t"])
+        if publish_every > 0 and t % publish_every == 0 and t < steps:
+            dhp.publish(job.job_id, STATUS_CKPT, state, step=t)
+    dhp.flush()
+    dhp.publish(
+        job.job_id, STATUS_FINISHED, product={"w": state["w"], "t": int(state["t"])},
+        step=int(state["t"]),
+    )
+    logger.info("worker %s finished job %s at t=%d", worker_name, job.job_id, int(state["t"]))
+    return EXIT_FINISHED
+
+
+# ---------------------------------------------------------------------------
+# entrypoint
+# ---------------------------------------------------------------------------
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="repro.fabric.worker")
+    ap.add_argument("--name", required=True, help="node name")
+    ap.add_argument("--store", required=True, help="shared NBS store root")
+    ap.add_argument("--socket", default="", help="unix socket path to serve on")
+    ap.add_argument("--tcp", default="", help="host:port to serve on (port 0 = ephemeral)")
+    ap.add_argument("--jobstore", default="", help="shared jobstore root")
+    ap.add_argument("--job-id", default="", help="run this job (empty + --claim: next job)")
+    ap.add_argument("--claim", action="store_true", help="claim the next unleased job")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--publish-every", type=int, default=10)
+    ap.add_argument("--step-ms", type=float, default=0.0, help="artificial per-step pacing")
+    ap.add_argument("--lease-s", type=float, default=60.0)
+    ap.add_argument("--grace-s", type=float, default=120.0, help="SIGTERM notice grace")
+    ap.add_argument("--writers", type=int, default=1, help="CMI save stripes (1 = bit-stable layout)")
+    ap.add_argument("--ready-file", default="", help="write {pid, address} here once serving")
+    ap.add_argument("--serve-only", action="store_true", help="no job loop; serve until shutdown")
+    return ap
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.tcp:
+        host, _, port = args.tcp.rpartition(":")
+        address = ("tcp", host or "127.0.0.1", int(port or 0))
+    elif args.socket:
+        address = ("unix", args.socket)
+    else:
+        raise SystemExit("worker needs --socket or --tcp")
+
+    nbs = NBS(args.store)
+    nbs.add_node(args.name, mesh=None)
+    jobstore = JobStore(args.jobstore) if args.jobstore else None
+    server = NodeServer(nbs, args.name, address, jobstore=jobstore).start()
+
+    notice = PreemptionNotice()
+    notice.install_sigterm(args.grace_s)
+
+    if args.ready_file:
+        tmp = Path(args.ready_file + ".tmp")
+        tmp.write_text(json.dumps({"pid": os.getpid(), "address": list(server.address)}))
+        os.replace(tmp, args.ready_file)
+
+    run_jobs = bool(args.job_id or args.claim) and jobstore is not None
+    try:
+        if args.serve_only or not run_jobs:
+            server.serve_forever(until=notice.imminent)
+            return EXIT_PREEMPTED if notice.imminent() else EXIT_FINISHED
+        dhp = DHP(nbs, args.name, jobstore, writers=args.writers)
+        return run_job_loop(
+            dhp, jobstore, notice,
+            job_id=args.job_id or None,
+            worker_name=args.name,
+            steps=args.steps,
+            publish_every=args.publish_every,
+            step_ms=args.step_ms,
+            lease_s=args.lease_s,
+        )
+    finally:
+        server.stop()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -112,6 +112,107 @@ def test_itinerary_fig8_and_resume(cluster):
     assert [n for n, _ in it2.trace] == ["write"]
 
 
+def test_itinerary_resume_array_state(cluster):
+    """Regression: a non-dict (array-valued) itinerary state used to resume
+    with the bookkeeping wrapper dict instead of the original array."""
+    nbs, store = cluster
+    dhp = DHP(nbs, "A", store)
+    job = store.create_job({})
+    it = Itinerary(dhp, job.job_id)
+    stages = [
+        Stage("B", lambda s: s + 1, "read", publish=True),
+        Stage("A", lambda s: s * 2, "compute", publish=True),
+        Stage("B", lambda s: s - 3, "write"),
+    ]
+    out = it.run(jnp.asarray(10.0), stages)
+    assert float(out) == 19.0
+    dhp2 = DHP(nbs, "A", store)
+    it2 = Itinerary(dhp2, job.job_id)
+    out2 = it2.resume(stages)  # only "write" remains: (10+1)*2 - 3
+    assert [n for n, _ in it2.trace] == ["write"]
+    assert float(np.asarray(out2)) == 19.0
+
+
+def test_hop_cmi_gc(cluster):
+    """Regression: store-mediated hops must not leak their transit CMI."""
+    nbs, store = cluster
+    dhp = DHP(nbs, "A", store)
+    state = dhp.hop({"x": jnp.ones((8,))}, "B", via="store")
+    state = dhp.hop(state, "A", via="store")
+    assert list(nbs.hop_root.iterdir()) == []
+    np.testing.assert_array_equal(np.asarray(state["x"]), np.ones(8))
+
+
+def test_finished_product_uses_io_engine(cluster):
+    """Regression: publish("finished") dropped chunk_bytes/writers."""
+    from repro.checkpoint.serializer import load_manifest
+
+    nbs, store = cluster
+    dhp = DHP(nbs, "A", store, chunk_bytes=256, writers=2)
+    job = store.create_job({})
+    dhp.publish(job.job_id, STATUS_CKPT, {"w": jnp.ones((1024,))}, step=1)
+    name = dhp.publish(
+        job.job_id, "finished", product={"w": jnp.arange(1024.0)}, step=1
+    )
+    man = load_manifest(store.cmi_root(job.job_id), name)
+    assert man.data_files == ["data-0.bin", "data-1.bin"]
+
+
+def test_async_publish_submit_drain_interleaving(cluster):
+    """Regression: the old worker exited on a 0.25s queue timeout while
+    _submit could still observe it alive, stranding a publish until the
+    300s flush timeout. Hammer exactly that window: bursts of submits
+    separated by idle gaps longer than the old timeout."""
+    nbs, store = cluster
+    dhp = DHP(nbs, "A", store, async_publish=True)
+    job = store.create_job({})
+    step = 0
+    for _round in range(3):
+        for _ in range(4):
+            step += 1
+            dhp.publish(job.job_id, STATUS_CKPT, {"w": jnp.full((64,), float(step))}, step=step)
+        t0 = time.time()
+        dhp.flush(timeout=30)
+        assert time.time() - t0 < 30
+        time.sleep(0.3)  # idle past the old 0.25s drain timeout
+    got, got_step = dhp.restart(job.job_id)
+    assert got_step == step
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.full((64,), float(step)))
+    dhp.close()
+
+
+def test_async_publish_machinery_stress(cluster):
+    """Submit/exit interleaving from many threads against the raw machinery
+    (no disk): every task runs exactly once and flush never strands."""
+    import threading
+
+    nbs, store = cluster
+    dhp = DHP(nbs, "A", store, async_publish=True)
+    ran = []
+    lock = threading.Lock()
+
+    def task(i):
+        with lock:
+            ran.append(i)
+
+    def submitter(base):
+        for i in range(50):
+            dhp._submit(task, base + i)
+
+    threads = [threading.Thread(target=submitter, args=(k * 50,)) for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dhp.flush(timeout=30)
+    assert sorted(ran) == list(range(200))
+    # a failing task surfaces at the next flush
+    dhp._submit(lambda: (_ for _ in ()).throw(RuntimeError("boom")))
+    with pytest.raises(RuntimeError, match="boom"):
+        dhp.flush(timeout=30)
+    dhp.close()
+
+
 def test_mobile_pipeline_schedule(cluster):
     nbs, store = cluster
     dhp = DHP(nbs, "A", store)

@@ -1,0 +1,250 @@
+"""Process fabric: real RPC, real signals, kill-tested preemption.
+
+The headline test SIGKILLs a worker process mid-job; a replacement process
+restores from the last *committed* published CMI and the final product is
+bit-identical to an uninterrupted run. A SIGTERM variant exercises the
+2-minute-notice path (publish, then exit EXIT_PREEMPTED).
+
+Every test is wrapped in a SIGALRM guard (pytest-timeout is not in the
+image) so a hung worker can never wedge the suite.
+"""
+
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import NBS, DHP
+from repro.core.cmi import restore_cmi
+from repro.core.jobstore import JobStore, STATUS_CKPT, STATUS_FINISHED
+from repro.core.preemption import SpotSchedule
+from repro.fabric import wire
+from repro.fabric.proxy import RemoteStateRef
+from repro.fabric.supervisor import FabricSupervisor
+from repro.fabric.worker import EXIT_FINISHED, EXIT_NO_JOB, EXIT_PREEMPTED
+
+PER_TEST_TIMEOUT_S = int(os.environ.get("NAVP_TEST_TIMEOUT", "180"))
+
+
+@pytest.fixture(autouse=True)
+def _alarm_guard():
+    """Per-test wall-clock guard: process-spawning tests must never hang."""
+
+    def on_alarm(signum, frame):
+        raise TimeoutError(f"fabric test exceeded {PER_TEST_TIMEOUT_S}s")
+
+    old = signal.signal(signal.SIGALRM, on_alarm)
+    signal.alarm(PER_TEST_TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+@pytest.fixture
+def fab(tmp_path):
+    """(supervisor, jobstore, store_root) with guaranteed worker cleanup."""
+    jroot = tmp_path / "jobs"
+    sup = FabricSupervisor(str(tmp_path / "s3"), str(jroot))
+    try:
+        yield sup, JobStore(jroot)
+    finally:
+        sup.shutdown()
+
+
+def _product_bytes(js: JobStore, job_id: str) -> bytes:
+    job = js.read_job(job_id)
+    assert job.status == STATUS_FINISHED and job.product
+    state, _ = restore_cmi(js.cmi_root(job_id), job.product)
+    return state["w"].tobytes() + str(state["t"]).encode()
+
+
+# ---------------------------------------------------------------------------
+# wire
+# ---------------------------------------------------------------------------
+
+
+def test_wire_roundtrip_both_codecs():
+    msgs = [
+        {"svc": "svc/hop", "kwargs": {"cmi": "hop-abc", "io_threads": 4}},
+        {"blob": b"\x00\xffbytes", "nested": [1, 2.5, None, "x"]},
+    ]
+    for prefer in (True, False):
+        for msg in msgs:
+            framed = wire.encode(msg, prefer_msgpack=prefer)
+            body = framed[4:]
+            assert wire.decode_body(body[:1], body[1:]) == msg
+
+
+def test_wire_rejects_bad_frames():
+    with pytest.raises(wire.WireError):
+        wire.decode_body(b"Z", b"{}")
+
+
+# ---------------------------------------------------------------------------
+# RPC: RemoteNode proxy over a live worker process
+# ---------------------------------------------------------------------------
+
+
+def test_remote_node_rpc_ping_hop_fetch(fab, tmp_path):
+    sup, _ = fab
+    handle = sup.spawn("B", serve_only=True)
+    nbs = NBS(tmp_path / "s3")
+    nbs.add_node("A", mesh=None)
+    nbs.add_remote_node("B", handle.address)
+
+    info = nbs.call("B", "svc/ping")
+    assert info["node"] == "B" and info["pid"] == handle.pid
+    assert info["pid"] != os.getpid()  # genuinely another process
+
+    # unknown service surfaces as RemoteError with the remote traceback
+    with pytest.raises(wire.RemoteError, match="no service"):
+        nbs.call("B", "svc/nope")
+
+    # store-mediated hop: state lands in the worker; receipt comes back
+    dhp = DHP(nbs, "A")
+    src = {"x": np.arange(64, dtype=np.float64), "step": 7}
+    ref = dhp.hop(dict(src), "B", via="store")
+    assert isinstance(ref, RemoteStateRef) and ref.leaves == 2 and ref.step == 7
+    assert dhp.node == "B"
+
+    # the transit hop-CMI was GC'd inside the worker after restore
+    fetched = nbs.call("B", "svc/fetch", token=ref.token)
+    names = {p.name for p in nbs.hop_root.iterdir()}
+    assert fetched["cmi"] in names and len(names) == 1
+
+    back, _ = restore_cmi(nbs.hop_root, fetched["cmi"])
+    assert back["x"].tobytes() == src["x"].tobytes()
+    assert int(back["step"]) == 7
+
+    nbs.remove_node("B")  # closes the client socket
+    # serve-only workers must still honor the SIGTERM notice path
+    assert sup.reclaim("B", notice=True) == EXIT_PREEMPTED
+
+
+def test_itinerary_rejects_remote_stage(fab, tmp_path):
+    """Itineraries run stage fns on local state; a stage landing on a
+    process-backed node must fail loudly, not feed the receipt to fn."""
+    from repro.core.itinerary import Itinerary, Stage
+
+    sup, _ = fab
+    handle = sup.spawn("B", serve_only=True)
+    nbs = NBS(tmp_path / "s3")
+    nbs.add_node("A", mesh=None)
+    nbs.add_remote_node("B", handle.address)
+    it = Itinerary(DHP(nbs, "A"))
+    with pytest.raises(NotImplementedError, match="process-backed"):
+        it.run({"x": np.ones(4)}, [Stage("B", lambda s: s, "read")])
+
+
+def test_remote_jobstore_services(fab):
+    sup, js = fab
+    job = js.create_job({"seed": 1})
+    handle = sup.spawn("B", serve_only=True)
+    nbs = NBS(sup.store_root)
+    nbs.add_remote_node("B", handle.address)
+    assert nbs.call("B", "svc/list_jobs") == [[job.job_id, "new"]]
+    got = nbs.call("B", "svc/get_job", job_id=job.job_id, worker="tester")
+    assert got["job_id"] == job.job_id and got["lease_owner"] == "tester"
+    # leased now -> a claim-next from another caller finds nothing
+    assert nbs.call("B", "svc/get_job", worker="rival") is None
+
+
+# ---------------------------------------------------------------------------
+# kill-tested preemption (the acceptance test)
+# ---------------------------------------------------------------------------
+
+JOB_INPUT = {"seed": 3, "n": 1024, "steps": 40, "publish_every": 5}
+
+
+def _run_clean(sup: FabricSupervisor, js: JobStore) -> bytes:
+    job = js.create_job(JOB_INPUT)
+    out = sup.run_job(job.job_id, steps=40, publish_every=5, step_ms=1, timeout_s=120)
+    assert out["incarnations"] == 1 and out["reclaims"] == 0
+    return _product_bytes(js, job.job_id)
+
+
+def test_sigkill_mid_job_resumes_bit_identical(fab, tmp_path):
+    """SIGKILL (no notice) mid-job; a fresh process resumes from the last
+    published CMI; the product is bit-identical to an uninterrupted run."""
+    sup, js = fab
+    clean = _run_clean(sup, js)
+
+    job = js.create_job(JOB_INPUT)
+    sched = SpotSchedule(preempt_steps=(10,), max_preemptions=1)
+    out = sup.run_job(
+        job.job_id, schedule=sched, notice=False,
+        steps=40, publish_every=5, step_ms=20, timeout_s=300,
+    )
+    assert out["reclaims"] == 1 and out["incarnations"] == 2
+    assert _product_bytes(js, job.job_id) == clean
+
+
+def test_sigterm_notice_publishes_then_resumes_bit_identical(fab):
+    """The 2-minute-notice path: SIGTERM -> worker publishes a CMI, exits
+    EXIT_PREEMPTED; replacement resumes to a bit-identical product."""
+    sup, js = fab
+    clean = _run_clean(sup, js)
+
+    job = js.create_job(JOB_INPUT)
+    name = "victim-0"
+    sup.spawn(name, job_id=job.job_id, steps=40, publish_every=5,
+              step_ms=25, grace_s=30)
+    # wait for the worker to get past its first published checkpoint
+    # (svc_publish_job sets status and cmi atomically under the job lock)
+    j = js.wait_for_status(job.job_id, STATUS_CKPT, timeout_s=60)
+    assert j.cmi is not None
+
+    rc = sup.reclaim(name, notice=True)
+    assert rc == EXIT_PREEMPTED
+    j = js.read_job(job.job_id)
+    assert j.status == STATUS_CKPT and j.cmi is not None
+
+    sup.spawn("victim-1", job_id=job.job_id, steps=40, publish_every=5, step_ms=1)
+    assert sup.workers["victim-1"].wait(timeout=60) == EXIT_FINISHED
+    assert _product_bytes(js, job.job_id) == clean
+
+
+def test_concurrent_claimants_one_winner(fab):
+    """The jobstore's fcntl leases under genuinely concurrent processes:
+    exactly one claimant wins the job; the others exit EXIT_NO_JOB."""
+    sup, js = fab
+    job = js.create_job({"seed": 5, "n": 256, "steps": 150, "publish_every": 25})
+    # wait=False: the claimants race for the lease from the moment they
+    # start, and a loser may exit before it can ever be pinged
+    handles = [
+        sup.spawn(f"claimant-{i}", claim=True, steps=150, publish_every=25,
+                  step_ms=30, lease_s=300, wait=False)
+        for i in range(3)
+    ]
+    rcs = sorted(h.wait(timeout=120) for h in handles)
+    assert rcs == [EXIT_FINISHED, EXIT_NO_JOB, EXIT_NO_JOB]
+    assert js.read_job(job.job_id).status == STATUS_FINISHED
+
+
+def test_supervisor_respawns_on_crash(fab):
+    """A worker that dies without any schedule (rogue kill -9 from outside
+    the supervisor's reclaim path) is detected and replaced."""
+    sup, js = fab
+    job = js.create_job(JOB_INPUT)
+    import threading
+
+    def assassin():
+        # wait for the first checkpoint, then murder whatever worker exists
+        js.wait_for_status(job.job_id, STATUS_CKPT, timeout_s=60)
+        if sup.workers:
+            h = next(iter(sup.workers.values()))
+            try:
+                os.kill(h.pid, signal.SIGKILL)
+            except ProcessLookupError:
+                pass
+
+    t = threading.Thread(target=assassin, daemon=True)
+    t.start()
+    out = sup.run_job(job.job_id, steps=40, publish_every=5, step_ms=20, timeout_s=300)
+    t.join(timeout=10)
+    assert out["incarnations"] >= 2
+    assert js.read_job(job.job_id).status == STATUS_FINISHED

@@ -75,6 +75,29 @@ def test_notice_and_schedule():
     assert not s.should_preempt(3)  # budget spent
 
 
+def test_spot_schedule_seed_determinism():
+    """Regression: the hazard draw used to be short-circuited by
+    preempt_steps hits, so two schedules sharing a seed diverged after the
+    first deterministic preemption. The hazard stream must depend only on
+    (seed, number of calls)."""
+    a = SpotSchedule(preempt_steps=(2, 5), hazard_per_step=0.4, seed=7)
+    b = SpotSchedule(preempt_steps=(), hazard_per_step=0.4, seed=7)
+    hits_a = [a.should_preempt(s) for s in range(40)]
+    hits_b = [b.should_preempt(s) for s in range(40)]
+    # outside the deterministic steps the two must agree exactly
+    for s in range(40):
+        if s not in (2, 5):
+            assert hits_a[s] == hits_b[s], f"diverged at step {s}"
+    # and the budget check must not consume draws either
+    c = SpotSchedule(hazard_per_step=0.4, seed=7, max_preemptions=1)
+    hits_c = [c.should_preempt(s) for s in range(40)]
+    first = hits_c.index(True)
+    assert hits_c[first + 1:] == [False] * (39 - first)  # budget spent
+    d = SpotSchedule(hazard_per_step=0.4, seed=7)
+    hits_d = [d.should_preempt(s) for s in range(40)]
+    assert hits_d[: first + 1] == hits_c[: first + 1]
+
+
 def test_run_preemptible_restarts():
     calls = []
 
