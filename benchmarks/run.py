@@ -1,19 +1,24 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness entry point.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--hop-out BENCH_hop.json]
 
 Sections map to the paper's experiments (DESIGN.md §7):
     bench_ckpt     — Exp 2: C/R overhead + CMI size (full/delta/device-hint/async)
-    bench_hop      — Exp 2: hop latency, live (streamed) vs store-mediated
+    bench_hop      — Exp 2: hop latency, live/store/xproc/stream/stream-delta
     bench_spot     — §2.2/Q1/Q2: spot-market cost model
     bench_colocate — Exp 1: VIIRS→CrIS co-location stages + match kernel
     bench_train    — end-to-end smoke train step + publish cadence overhead
     roofline       — §Roofline table from the dry-run artifacts (if present)
+
+``--hop-out`` also records the hop section as machine-readable JSON (schema
+mirrors ``BENCH_ckpt.json``, with ``env.notes``) so the transport's perf
+trajectory is comparable across PRs.
 """
 
 from __future__ import annotations
 
+import json
 import sys
 
 
@@ -70,11 +75,21 @@ def bench_train_rows(fast: bool) -> list[tuple[str, float, str]]:
 
 def main() -> None:
     fast = "--fast" in sys.argv
+    hop_out = None
+    if "--hop-out" in sys.argv:
+        i = sys.argv.index("--hop-out") + 1
+        if i >= len(sys.argv) or sys.argv[i].startswith("--"):
+            raise SystemExit("--hop-out needs a file path argument")
+        hop_out = sys.argv[i]
     print("name,us_per_call,derived")
     from benchmarks import bench_ckpt, bench_colocate, bench_hop, bench_spot
 
     _section("ckpt", bench_ckpt.run(16 if fast else 64))
-    _section("hop", bench_hop.run(16 if fast else 64))
+    hop_rows, hop_results = bench_hop.bench(16 if fast else 64)
+    _section("hop", hop_rows)
+    if hop_out:
+        with open(hop_out, "w") as f:
+            json.dump(hop_results, f, indent=1, sort_keys=True)
     _section("spot", bench_spot.run())
     _section("colocate", bench_colocate.run(2 if fast else 4))
     _section("train", bench_train_rows(fast))

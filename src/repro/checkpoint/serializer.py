@@ -10,22 +10,35 @@ When a ``parent`` CMI is given, blocks whose (path, slice, hash) match the
 parent are recorded as *references* into the parent's data file instead of
 being rewritten — this is the paper's §Q3 incremental checkpointing.
 
+Shared chunk engine
+-------------------
+Chunk enumeration + hashing live in :func:`iter_state_chunks`, decoupled
+from any file writer: it walks the tree in deterministic enumeration order
+(arrays sorted by path, unique shards sorted by slice, axis-0 row blocks in
+order), hashes + CRCs blocks on a bounded-window thread pool (hash chunk
+k+1 while the consumer disposes of chunk k), and yields
+:class:`StateChunk` items. Chunks whose hash matches a ``baseline`` grid
+(a delta parent's chunk table, or a streaming peer's cached state) are
+yielded as *references* with no payload. ``save_checkpoint`` consumes this
+iterator into file writers; the fabric's streaming hop
+(``repro.fabric.stream``) consumes the very same iterator into a socket,
+and :class:`StateAssembler` / :func:`assemble_state_chunks` is the
+receiving half that rebuilds the pytree chunk by chunk.
+
 Parallel sharded I/O engine
 ---------------------------
 With ``SaveOptions.writers == 1`` the save is fully sequential into a single
 ``data-0.bin`` (the seed layout). With ``writers == W > 1`` the data stream
 is striped round-robin across ``data-0.bin … data-{W-1}.bin``, serviced by
 pure-I/O writer threads (one per file on big hosts; several files per thread
-on small ones) that batch queued chunks into vectored ``writev`` calls,
-while a bounded-window thread pool hashes + CRCs blocks ahead of the write
-front (hash chunk k+1 while chunk k is on the wire). Contiguous blocks are
-written as ``memoryview``s into the host buffers — no ``tobytes()`` copy.
-Chunk→file placement is round-robin over the *written* chunk index in
-enumeration order, so the manifest (files, offsets) is byte-deterministic
-for a given input regardless of thread timing — the delta hint grid
-(``core/delta.py``) and GC both rely on that. Every shard file is fsync'd
-(concurrently, by its writer thread) before ``CommitScope`` writes COMMIT,
-preserving the crash-atomicity protocol (paper §Q4).
+on small ones) that batch queued chunks into vectored ``writev`` calls.
+Contiguous blocks are written as ``memoryview``s into the host buffers — no
+``tobytes()`` copy. Chunk→file placement is round-robin over the *written*
+chunk index in enumeration order, so the manifest (files, offsets) is
+byte-deterministic for a given input regardless of thread timing — the
+delta hint grid (``core/delta.py``) and GC both rely on that. Every shard
+file is fsync'd (concurrently, by its writer thread) before ``CommitScope``
+writes COMMIT, preserving the crash-atomicity protocol (paper §Q4).
 
 Restore path
 ------------
@@ -382,33 +395,23 @@ def _hash_and_crc(buf) -> tuple[str, int]:
 
 
 class _ChunkSink:
-    """Finalises chunk entries in deterministic enumeration order.
+    """Writes finalized chunks (hash/CRC precomputed by the shared chunk
+    engine) through the striped writer pool, maintaining save stats.
 
-    The caller appends a placeholder slot per chunk (`put_ref`/`put_data`);
-    data chunks are hashed + CRC'd on a bounded-window pool while earlier
-    chunks stream to the pure-I/O striped writers, pipelining CPU against
-    disk (hash chunk k+1 while chunk k is on the wire). With ``writers == 1``
-    everything runs inline on the calling thread.
+    Pure plumbing: the hashing pipeline lives in :func:`iter_state_chunks`,
+    which stays a bounded window ahead of this sink, so CPU (hash chunk k+1)
+    still overlaps disk (write chunk k) exactly as before the refactor.
     """
 
     def __init__(self, scope: CommitScope, writers: int, stats: dict, parent: str | None):
-        self.parallel = writers > 1
         self.stats = stats
         self.parent = parent
-        if self.parallel:
+        if writers > 1:
             self.engine: Any = _StripedWriterPool(scope, writers)
-            hash_threads = max(1, min(writers, os.cpu_count() or 1))
-            self.pool: ThreadPoolExecutor | None = ThreadPoolExecutor(
-                max_workers=hash_threads, thread_name_prefix="cmi-hash"
-            )
-            self.window = writers * 4
         else:
             self.engine = _ChunkWriter(scope.path(DATA_FILE))
-            self.pool = None
-            self.window = 0
-        self._pending: deque = deque()
 
-    def _ref_entry(self, bslice, pchunk: ChunkEntry, h: str | None = None) -> ChunkEntry:
+    def put_ref(self, chunks: list, bslice, pchunk: ChunkEntry, h: str | None = None) -> None:
         cent = ChunkEntry(
             slice=[list(s) for s in bslice],
             file=pchunk.file,
@@ -420,29 +423,10 @@ class _ChunkSink:
         )
         self.stats["ref_bytes"] += cent.nbytes
         self.stats["ref_chunks"] += 1
-        return cent
-
-    def put_ref(self, chunks: list, bslice, pchunk: ChunkEntry) -> None:
         self.stats["chunks"] += 1
-        chunks.append(self._ref_entry(bslice, pchunk))
+        chunks.append(cent)
 
-    def put_data(self, chunks: list, bslice, block: np.ndarray, pchunk: ChunkEntry | None) -> None:
-        self.stats["chunks"] += 1
-        buf = _byte_view(block)
-        if self.pool is None:
-            chunks.append(self._finalise(bslice, pchunk, buf, _hash_and_crc(buf)))
-            return
-        idx = len(chunks)
-        chunks.append(None)  # slot filled at drain, preserving order
-        fut = self.pool.submit(_hash_and_crc, buf)
-        self._pending.append((chunks, idx, bslice, pchunk, buf, fut))
-        if len(self._pending) >= self.window:
-            self._drain_one()
-
-    def _finalise(self, bslice, pchunk, buf, h_crc: tuple[str, int]) -> ChunkEntry:
-        h, crc = h_crc
-        if pchunk is not None and pchunk.hash == h:
-            return self._ref_entry(bslice, pchunk, h)
+    def put_data(self, chunks: list, bslice, buf, h: str, crc: int) -> None:
         cent = ChunkEntry(
             slice=[list(s) for s in bslice],
             file="",
@@ -453,20 +437,11 @@ class _ChunkSink:
         )
         cent.file, cent.offset, cent.nbytes = self.engine.append(buf, cent)
         self.stats["written_bytes"] += cent.nbytes
-        return cent
-
-    def _drain_one(self) -> None:
-        chunks, idx, bslice, pchunk, buf, fut = self._pending.popleft()
-        chunks[idx] = self._finalise(bslice, pchunk, buf, fut.result())
+        self.stats["chunks"] += 1
+        chunks.append(cent)
 
     def close(self) -> None:
-        try:
-            while self._pending:
-                self._drain_one()
-        finally:
-            if self.pool is not None:
-                self.pool.shutdown(wait=True)
-            self.engine.close()
+        self.engine.close()
 
     @property
     def data_files(self) -> list[str]:
@@ -479,6 +454,295 @@ def _chunk_rows(shard_shape: tuple[int, ...], itemsize: int, chunk_bytes: int) -
         return 1
     row_bytes = itemsize * int(np.prod(shard_shape[1:], dtype=np.int64)) if len(shard_shape) > 1 else itemsize
     return max(1, chunk_bytes // max(1, row_bytes))
+
+
+# ---------------------------------------------------------------------------
+# shared chunk engine (save-to-disk and stream-to-socket both consume this)
+# ---------------------------------------------------------------------------
+
+
+def bslice_key(bslice) -> tuple:
+    """Canonical hashable key for a chunk's full-array slice."""
+    return tuple((int(a), int(b)) for a, b in bslice)
+
+
+def _block_nbytes(bslice, itemsize: int) -> int:
+    n = 1
+    for a, b in bslice:
+        n *= b - a
+    return n * itemsize
+
+
+@dataclass
+class StateChunk:
+    """One chunk produced by :func:`iter_state_chunks`.
+
+    ``data`` is a byte buffer (``memoryview``/``bytes``) for chunks that must
+    travel, or ``None`` for *reference* chunks whose content matched the
+    ``baseline`` grid — the consumer resolves those against its own copy of
+    the baseline (a delta parent's data file, or a streaming receiver's
+    cached state). ``crc32`` is ``None`` when hashing was skipped entirely
+    (device changed-hint said "unchanged").
+    """
+
+    seq: int
+    path: str
+    slice: list[list[int]]
+    data: Any
+    nbytes: int
+    hash: str
+    crc32: int | None
+    ref: bool
+
+
+def _iter_array_blocks(x: Any, chunk_bytes: int):
+    """Yield ``(bslice, block)`` for one array leaf in the engine's canonical
+    order: unique shards sorted by slice, then axis-0 row blocks in order."""
+    dtype = np.dtype(x.dtype)
+    for sl, data in _unique_shards(x):
+        rows = _chunk_rows(data.shape, dtype.itemsize, chunk_bytes)
+        n0 = data.shape[0] if data.ndim else 1
+        for r0 in range(0, n0, rows):
+            r1 = min(n0, r0 + rows)
+            if data.ndim:
+                block = data[r0:r1]
+                bslice = [[sl[0][0] + r0, sl[0][0] + r1]] + [[a, b] for a, b in sl[1:]]
+            else:
+                block = data
+                bslice = []
+            yield bslice, block
+
+
+def state_stream_meta(tree: Any) -> dict:
+    """JSON-able description of ``tree``: structure skeleton + array table.
+
+    This is the manifest's restore-relevant core without any file/offset
+    bookkeeping — what a streaming receiver needs to preallocate arrays and
+    rebuild the pytree (``repro.fabric.stream`` sends it as the stream
+    header)."""
+    flat, _ = flatten_with_paths(tree)
+    array_paths = {k for k, v in flat.items() if _is_array_leaf(v)}
+    arrays = {}
+    for apath in sorted(array_paths):
+        x = flat[apath]
+        rec = _sharding_record(x)
+        arrays[apath] = {
+            "shape": [int(d) for d in x.shape],
+            "dtype": dtype_to_str(np.dtype(x.dtype)),
+            "sharding": None if rec is None else rec.to_json(),
+        }
+    return {"structure": encode_structure(tree, array_paths), "arrays": arrays}
+
+
+def iter_state_chunks(
+    tree: Any,
+    *,
+    chunk_bytes: int = 16 << 20,
+    baseline: Mapping[tuple, str] | None = None,
+    changed_hint: Mapping[str, np.ndarray] | None = None,
+    hash_threads: int = 0,
+    window: int = 0,
+) -> Any:
+    """Chunk + hash ``tree`` in deterministic enumeration order.
+
+    Yields :class:`StateChunk` in order. Hashing runs on a bounded-window
+    thread pool (``hash_threads``; 0 = min(8, cpu_count), 1 = inline), so
+    the pool hashes chunk k+window while the consumer writes/sends chunk k.
+
+    ``baseline`` maps ``(path, bslice_key(slice))`` to a content hash;
+    chunks whose hash matches are yielded as references (``data=None``).
+    ``changed_hint`` (per-array chunk-grid bitmaps from
+    ``core/delta.device_changed_hints``) short-circuits hashing entirely for
+    chunks the device already proved unchanged — those reuse the baseline
+    hash verbatim, keeping the grid continuous for the *next* delta.
+    """
+    flat, _ = flatten_with_paths(tree)
+    array_paths = sorted(k for k, v in flat.items() if _is_array_leaf(v))
+    baseline = baseline or {}
+    changed_hint = changed_hint or {}
+    threads = hash_threads if hash_threads > 0 else max(1, min(8, os.cpu_count() or 1))
+    pool = (
+        ThreadPoolExecutor(max_workers=threads, thread_name_prefix="cmi-hash")
+        if threads > 1
+        else None
+    )
+    window = window if window > 0 else threads * 4
+    pending: deque = deque()  # (path, bslice, itemsize, buf|None, fut|None)
+    seq = 0
+
+    def drain_one() -> StateChunk:
+        nonlocal seq
+        path, bslice, itemsize, buf, fut = pending.popleft()
+        key = (path, bslice_key(bslice))
+        nbytes = _block_nbytes(bslice, itemsize)
+        if buf is None:  # device hint: unchanged, never hashed
+            ch = StateChunk(seq, path, [list(s) for s in bslice], None, nbytes,
+                            baseline[key], None, True)
+        else:
+            h, crc = fut.result() if fut is not None else _hash_and_crc(buf)
+            if baseline.get(key) == h:
+                ch = StateChunk(seq, path, [list(s) for s in bslice], None, nbytes,
+                                h, crc, True)
+            else:
+                ch = StateChunk(seq, path, [list(s) for s in bslice], buf, nbytes,
+                                h, crc, False)
+        seq += 1
+        return ch
+
+    try:
+        for apath in array_paths:
+            x = flat[apath]
+            itemsize = np.dtype(x.dtype).itemsize
+            hint = changed_hint.get(apath)
+            counter = 0
+            for bslice, block in _iter_array_blocks(x, chunk_bytes):
+                key = (apath, bslice_key(bslice))
+                unchanged_hint = (
+                    hint is not None
+                    and counter < len(hint)
+                    and not bool(hint[counter])
+                    and key in baseline
+                )
+                counter += 1
+                if unchanged_hint:
+                    pending.append((apath, bslice, itemsize, None, None))
+                else:
+                    buf = _byte_view(block)
+                    fut = pool.submit(_hash_and_crc, buf) if pool is not None else None
+                    pending.append((apath, bslice, itemsize, buf, fut))
+                while len(pending) >= window:
+                    yield drain_one()
+        while pending:
+            yield drain_one()
+    finally:
+        if pool is not None:
+            pool.shutdown(wait=True, cancel_futures=True)
+
+
+class StreamStateError(RuntimeError):
+    """A streamed chunk failed validation (CRC/hash/baseline mismatch)."""
+
+
+class StateAssembler:
+    """Receiving half of the chunk engine: rebuild a pytree chunk by chunk.
+
+    Constructed from :func:`state_stream_meta` output; chunks may arrive in
+    any order. ``target_view(path, slice)`` hands out a writable memoryview
+    of the destination region when it is contiguous, so a socket receiver
+    can ``recv_into`` payload bytes with zero intermediate copies; otherwise
+    ``put`` scatters from a scratch buffer. Reference chunks are resolved
+    against a cached ``baseline`` tree from a previous stream (delta hops).
+    """
+
+    def __init__(
+        self,
+        meta: Mapping[str, Any],
+        *,
+        baseline: Any = None,
+        baseline_grid: Mapping[tuple, str] | None = None,
+        validate_crc: bool = True,
+    ):
+        self.structure = meta["structure"]
+        self.validate = validate_crc
+        self.arrays: dict[str, np.ndarray] = {}
+        self._filled: dict[str, int] = {}
+        self.grid: dict[tuple, str] = {}  # (path, bslice_key) -> hash
+        for apath, a in meta["arrays"].items():
+            shape = tuple(int(d) for d in a["shape"])
+            self.arrays[apath] = np.empty(shape, dtype=dtype_from_str(a["dtype"]))
+            self._filled[apath] = 0
+        self._baseline_flat: dict[str, Any] | None = None
+        if baseline is not None:
+            self._baseline_flat, _ = flatten_with_paths(baseline)
+        self._baseline_grid = dict(baseline_grid or {})
+
+    def _box(self, arr: np.ndarray, bslice) -> tuple:
+        if not bslice:
+            return ()
+        return tuple(slice(a, b) for a, b in bslice)
+
+    def target_view(self, path: str, bslice) -> memoryview | None:
+        """Writable byte view of the destination region, or ``None`` when the
+        region is not contiguous (receiver must scatter via ``put``)."""
+        arr = self.arrays[path]
+        if arr.ndim != len(bslice):
+            return None
+        if not arr.flags.c_contiguous:
+            return None
+        for d in range(1, arr.ndim):
+            a, b = bslice[d]
+            if a != 0 or b != arr.shape[d]:
+                return None
+        region = arr[bslice[0][0]: bslice[0][1]] if bslice else arr
+        try:
+            return memoryview(region).cast("B")
+        except (ValueError, TypeError):
+            return memoryview(region.reshape(-1).view(np.uint8))
+
+    def put(
+        self,
+        path: str,
+        bslice,
+        data=None,
+        *,
+        hash: str | None = None,
+        crc32: int | None = None,
+        ref: bool = False,
+        inplace: bool = False,
+    ) -> None:
+        """Account one chunk. ``inplace=True`` means the payload was already
+        ``recv_into``'d through :meth:`target_view` (data is that view, used
+        only for CRC validation)."""
+        arr = self.arrays[path]
+        key = (path, bslice_key(bslice))
+        if ref:
+            if self._baseline_flat is None or path not in self._baseline_flat:
+                raise StreamStateError(f"ref chunk {key} but no baseline state")
+            if hash is not None and self._baseline_grid.get(key) not in (None, hash):
+                raise StreamStateError(f"baseline hash mismatch for {key}")
+            src = self._baseline_flat[path][self._box(arr, bslice)]
+            arr[self._box(arr, bslice)] = src
+        else:
+            if self.validate and crc32 is not None and crc32_of(data) != crc32:
+                raise StreamStateError(f"CRC mismatch in streamed chunk {key}")
+            if not inplace:
+                shape = tuple(b - a for a, b in bslice)
+                block = np.frombuffer(data, dtype=arr.dtype).reshape(shape)
+                arr[self._box(arr, bslice)] = block
+        if hash is not None:
+            self.grid[key] = hash
+        vol = 1
+        for a, b in bslice:
+            vol *= b - a
+        self._filled[path] += vol
+
+    def finish(self) -> Any:
+        """Validate coverage and return the rebuilt pytree."""
+        for apath, arr in self.arrays.items():
+            expected = int(np.prod(arr.shape, dtype=np.int64)) if arr.shape else 1
+            if self._filled[apath] != expected:
+                raise StreamStateError(
+                    f"array {apath!r}: chunks cover {self._filled[apath]}/{expected} elements"
+                )
+        return decode_structure(self.structure, dict(self.arrays))
+
+
+def assemble_state_chunks(
+    meta: Mapping[str, Any],
+    chunks,
+    *,
+    baseline: Any = None,
+    baseline_grid: Mapping[tuple, str] | None = None,
+    validate_crc: bool = True,
+) -> tuple[Any, dict[tuple, str]]:
+    """Inverse of :func:`iter_state_chunks`: fold a chunk iterable back into
+    a pytree. Returns ``(tree, hash grid)`` — the grid keys future deltas."""
+    asm = StateAssembler(
+        meta, baseline=baseline, baseline_grid=baseline_grid, validate_crc=validate_crc
+    )
+    for ch in chunks:
+        asm.put(ch.path, ch.slice, ch.data, hash=ch.hash, crc32=ch.crc32, ref=ch.ref)
+    return asm.finish(), asm.grid
 
 
 def save_checkpoint(
@@ -511,51 +775,36 @@ def save_checkpoint(
     structure = encode_structure(tree, array_paths)
 
     arrays: dict[str, ArrayEntry] = {}
+    for apath in sorted(array_paths):
+        x = flat[apath]
+        arrays[apath] = ArrayEntry(
+            shape=list(x.shape),
+            dtype=dtype_to_str(np.dtype(x.dtype)),
+            chunks=[],
+            sharding=_sharding_record(x),
+        )
+    baseline = {key: c.hash for key, c in parent_chunks.items()}
     stats = {"written_bytes": 0, "ref_bytes": 0, "chunks": 0, "ref_chunks": 0}
 
     with CommitScope(final, crash_after_data=_crash_after_data) as scope:
         sink = _ChunkSink(scope, writers, stats, parent=opts.parent)
         try:
-            for apath in sorted(array_paths):
-                x = flat[apath]
-                dtype = np.dtype(x.dtype)
-                entry = ArrayEntry(
-                    shape=list(x.shape),
-                    dtype=dtype_to_str(dtype),
-                    chunks=[],
-                    sharding=_sharding_record(x),
-                )
-                hint = opts.changed_hint.get(apath)
-                chunk_counter = 0
-                for sl, data in _unique_shards(x):
-                    rows = _chunk_rows(data.shape, dtype.itemsize, opts.chunk_bytes)
-                    n0 = data.shape[0] if data.ndim else 1
-                    for r0 in range(0, n0, rows):
-                        r1 = min(n0, r0 + rows)
-                        if data.ndim:
-                            block = data[r0:r1]
-                            bslice = [[sl[0][0] + r0, sl[0][0] + r1]] + [
-                                [a, b] for a, b in sl[1:]
-                            ]
-                        else:
-                            block = data
-                            bslice = []
-                        key = (apath, tuple(tuple(s) for s in bslice))
-                        pchunk = parent_chunks.get(key)
-                        unchanged_hint = (
-                            hint is not None
-                            and chunk_counter < len(hint)
-                            and not bool(hint[chunk_counter])
-                            and pchunk is not None
-                        )
-                        if unchanged_hint:
-                            # Device-side bitmap says this block is identical;
-                            # skip the host hash entirely (paper §Q3/Q5).
-                            sink.put_ref(entry.chunks, bslice, pchunk)
-                        else:
-                            sink.put_data(entry.chunks, bslice, block, pchunk)
-                        chunk_counter += 1
-                arrays[apath] = entry
+            # The shared chunk engine hashes a bounded window ahead (inline
+            # when writers == 1 — the fully-sequential seed path) while the
+            # sink streams earlier chunks to the pure-I/O writer threads.
+            for ch in iter_state_chunks(
+                tree,
+                chunk_bytes=opts.chunk_bytes,
+                baseline=baseline,
+                changed_hint=opts.changed_hint,
+                hash_threads=1 if writers == 1 else 0,
+            ):
+                entry = arrays[ch.path]
+                if ch.ref:
+                    pchunk = parent_chunks[(ch.path, bslice_key(ch.slice))]
+                    sink.put_ref(entry.chunks, ch.slice, pchunk, ch.hash)
+                else:
+                    sink.put_data(entry.chunks, ch.slice, ch.data, ch.hash, ch.crc32)
         finally:
             sink.close()
         for fname in sink.data_files:  # writers fsync'd these on close

@@ -21,6 +21,14 @@ round-robin placement is deterministic in enumeration order, so hint bitmap
 indices stay aligned with the chunk table no matter how many writers ran.
 A delta chunk may therefore reference a parent chunk living in any of the
 parent's shard files (``ChunkEntry.file`` + ``ref`` resolve it).
+
+The same grid also keys the *streaming* delta path: a repeated
+``dhp.hop(..., changed_hint=device_changed_hints(prev, cur))`` to a
+process-backed node sends only the chunks whose bitmap bit (or content
+hash) changed since the destination's cached baseline — the shared chunk
+engine (``serializer.iter_state_chunks``) walks the identical enumeration
+order whether the consumer is a data file or a socket, so one bitmap serves
+disk deltas and wire deltas alike.
 """
 
 from __future__ import annotations

@@ -13,6 +13,15 @@ Two utilities around checkpoint/restart:
     intermediate disk write (``jax.device_put`` resharding = ICI/DCN
     transfer on real hardware).
 
+    A ``via="stream"`` path does the same across a *process* boundary: the
+    CMI's chunks travel straight over the fabric socket
+    (``repro.fabric.stream``), never touching the disk — with a delta mode
+    that resends only changed chunks when the destination still holds the
+    previous hop's state. ``via="auto"`` prefers it for stream-capable
+    destinations and falls back transparently to the store-mediated path on
+    any stream failure; ``publish`` never streams (durability needs the
+    disk).
+
 ``publish(job_id, status, ...)``  (Fig. 6)
     status == "ckpt":     checkpoint, upload CMI, svc/publish_job("ckpt")
     status == "finished": upload product,         svc/publish_job("finished")
@@ -76,12 +85,30 @@ class DHP:
     # ------------------------------------------------------------------
     # hop (Fig. 3 + Fig. 4)
     # ------------------------------------------------------------------
-    def hop(self, state: Any, dest: str, *, via: str = "auto", step: int = 0) -> Any:
-        """Migrate ``state`` to node ``dest``; returns the state living there."""
+    def hop(
+        self,
+        state: Any,
+        dest: str,
+        *,
+        via: str = "auto",
+        step: int = 0,
+        changed_hint: dict | None = None,
+    ) -> Any:
+        """Migrate ``state`` to node ``dest``; returns the state living there.
+
+        ``changed_hint`` (per-array chunk bitmaps from
+        ``core/delta.device_changed_hints``) lets a streamed repeat hop skip
+        hashing chunks the device already proved unchanged.
+        """
         src = self.node
         dest_node = self.nbs.node(dest)  # raises if dest was reclaimed
         if via == "auto":
-            via = "live" if dest_node.mesh is not None else "store"
+            if dest_node.mesh is not None:
+                via = "live"
+            elif getattr(dest_node, "supports_hop_stream", False):
+                via = "stream"
+            else:
+                via = "store"
         self.nbs.plugins.emit("on_hop", src=src, dest=dest, via=via, cmi=None)
         if via == "live":
             # §Q5: stream directly — reshard onto the destination mesh.
@@ -90,6 +117,24 @@ class DHP:
             self.node = dest
             logger.info("hop(live) %s -> %s", src, dest)
             return out
+        if via == "stream":
+            # §Q5 across a process boundary: chunks go straight down the
+            # socket. Any failure falls back to the store-mediated path, so
+            # hop semantics (and preemption guarantees) are unchanged.
+            try:
+                out = dest_node.hop_stream(
+                    state, step=step, chunk_bytes=self.chunk_bytes,
+                    changed_hint=changed_hint, src=src,
+                )
+                self.node = dest
+                logger.info("hop(stream) %s -> %s", src, dest)
+                return out
+            except Exception as e:
+                logger.warning(
+                    "hop(stream) %s -> %s failed (%s); falling back to store path",
+                    src, dest, e,
+                )
+                self.nbs.plugins.emit("on_hop", src=src, dest=dest, via="store", cmi=None)
         # store-mediated (Fig. 3): checkpoint -> S3 -> svc/hop(dest)
         name = f"hop-{uuid.uuid4().hex[:12]}"
         self.nbs.plugins.emit("on_checkpoint", node=src, cmi=name, step=step)

@@ -16,6 +16,8 @@ would put these behind RPC — see DESIGN.md §2):
     svc_list_jobs()                      -> [[job_id, status], ...]   (Fig. 5)
     svc_get_job(job_id=None, lease_s=..) -> Job | None                 (§3.3-2)
     svc_publish_job(job_id, status, ...)                               (§3.3-3)
+    renew_lease(job_id, worker, ...)     -> Job      (heartbeat; LeaseLost if
+                                            another worker stole the lease)
 
 Storage is a directory tree with atomic JSON writes (tmp + rename) and
 ``fcntl`` advisory locks, so the store itself survives preemption mid-update.
@@ -41,6 +43,10 @@ STATUS_NEW = "new"
 STATUS_CKPT = "ckpt"
 STATUS_FINISHED = "finished"
 VALID_STATUS = (STATUS_NEW, STATUS_CKPT, STATUS_FINISHED)
+
+
+class LeaseLost(RuntimeError):
+    """A lease renewal found the lease held by a different worker."""
 
 
 @dataclass
@@ -150,11 +156,22 @@ class JobStore:
         *,
         worker: str = "worker-0",
         lease_s: float = 3600.0,
+        steal: bool = True,
     ) -> Job | None:
-        """Return the requested job, or claim the next not-finished job."""
+        """Return the requested job, or claim the next not-finished job.
+
+        With ``steal=False`` a specific-job claim respects a live lease held
+        by another worker (returns ``None``); an *expired* lease is always
+        claimable — that is how a healthy worker takes over from one that
+        stopped heartbeating (``renew_lease``) without any explicit release.
+        ``steal=True`` (the default) keeps supervisor-respawn semantics: the
+        supervisor only re-claims a job when it knows the old worker is dead.
+        """
         if job_id is not None:
             with self._lock(job_id):
                 job = self.read_job(job_id)
+                if not steal and job.leased() and job.lease_owner != worker:
+                    return None
                 job.lease_owner, job.lease_expiry = worker, time.time() + lease_s
                 self._update(job, f"leased:{worker}")
             return job
@@ -169,6 +186,23 @@ class JobStore:
                 self._update(job, f"leased:{worker}")
                 return job
         return None
+
+    def renew_lease(self, job_id: str, worker: str, lease_s: float = 3600.0) -> Job:
+        """Heartbeat: extend ``worker``'s lease on ``job_id``.
+
+        Raises :class:`LeaseLost` if another worker holds (or stole) the
+        lease — the caller must stop publishing for this job. Renewals do
+        not append history (they would dominate it at heartbeat cadence).
+        """
+        with self._lock(job_id):
+            job = self.read_job(job_id)
+            if job.lease_owner != worker:
+                raise LeaseLost(
+                    f"job {job_id} lease is held by {job.lease_owner!r}, not {worker!r}"
+                )
+            job.lease_expiry = time.time() + lease_s
+            _atomic_write_json(self._job_file(job_id), job.to_json())
+        return job
 
     def svc_publish_job(
         self,

@@ -40,13 +40,16 @@ class RemoteStateRef:
 
     Lives in core (not ``repro.fabric``) so state-consuming layers like
     itineraries can recognize "your state went somewhere you cannot touch
-    it" without importing the fabric.
+    it" without importing the fabric. ``via`` records which transport landed
+    the state: ``"store"`` (disk-mediated Fig. 3/4) or ``"stream"`` (the
+    §Q5 socket pipeline).
     """
 
     node: str
     token: str
     step: int
     leaves: int
+    via: str = "store"
 
 
 @dataclass
@@ -57,6 +60,11 @@ class Node:
     mesh: Mesh | None = None
     services: dict[str, Callable] = field(default_factory=dict)
     meta: dict[str, Any] = field(default_factory=dict)
+
+    # Process-backed subclasses that can receive a state stream over their
+    # socket (``repro.fabric.proxy.RemoteNode``) flip this; ``dhp.hop`` uses
+    # it to prefer the §Q5 streaming transport over store-mediation.
+    supports_hop_stream = False
 
     def register(self, svc_name: str, handler: Callable) -> None:
         self.services[svc_name] = handler

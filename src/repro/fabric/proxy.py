@@ -23,20 +23,68 @@ from repro.utils import logger
 
 
 class FabricClient:
-    """One connection to a NodeServer; thread-safe request/response."""
+    """One connection to a NodeServer; thread-safe request/response.
 
-    def __init__(self, address):
+    A dead connection (worker SIGKILLed, then respawned at the same address)
+    is re-established transparently: one reconnect attempt per request, with
+    a short window to cover a replacement worker re-binding the address.
+    This is what lets a streaming hop's *fallback* store-mediated request
+    land on the respawned instance instead of dying with the old one.
+
+    Only idempotent services are re-sent (the connection may have died
+    AFTER the server executed the request): re-leasing, re-restoring a hop
+    CMI, or re-dropping a token converge to the same end state, but
+    ``svc/fetch`` (drop side effect) and ``svc/publish_job`` (status
+    transitions) must surface the transport error instead of executing
+    twice.
+    """
+
+    _RETRY_SAFE = frozenset({
+        "svc/ping", "svc/hop", "svc/drop", "svc/list_jobs", "svc/get_job",
+        "svc/renew_lease", "svc/shutdown",
+    })
+
+    def __init__(self, address, *, reconnect_timeout_s: float = 10.0):
         self.address = tuple(address)
+        self.reconnect_timeout_s = reconnect_timeout_s
         self._sock = wire.connect(self.address)
+        self._reader = wire.FrameReader(self._sock)
         self._lock = threading.Lock()
         self._next_id = 0
+
+    def _reconnect(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        deadline = time.monotonic() + self.reconnect_timeout_s
+        while True:
+            try:
+                self._sock = wire.connect(self.address)
+                self._reader = wire.FrameReader(self._sock)
+                return
+            except OSError:
+                if time.monotonic() >= deadline:
+                    raise
+                time.sleep(0.1)
 
     def request(self, svc: str, **kwargs) -> Any:
         with self._lock:
             self._next_id += 1
             rid = self._next_id
-            wire.send_msg(self._sock, {"id": rid, "svc": svc, "kwargs": kwargs})
-            resp = wire.recv_msg(self._sock)
+            for attempt in (0, 1):
+                try:
+                    wire.send_msg(self._sock, {"id": rid, "svc": svc, "kwargs": kwargs})
+                    resp = self._reader.recv_msg()
+                    break
+                except (OSError, wire.WireError):
+                    if attempt or svc not in self._RETRY_SAFE:
+                        raise
+                    logger.warning(
+                        "fabric connection to %s lost during %s; reconnecting",
+                        self.address, svc,
+                    )
+                    self._reconnect()
         if not isinstance(resp, dict) or resp.get("id") != rid:
             raise wire.WireError(f"out-of-order response: {resp!r}")
         if resp.get("ok"):
@@ -77,6 +125,16 @@ class RemoteNode(Node):
 
     client: FabricClient | None = None
     _hop_wrap: bool = field(default=True, repr=False)
+    # (token, {(path, bslice_key): hash}) from the last streamed hop to this
+    # node — the delta baseline for the next one. None until a stream lands.
+    _stream_baseline: tuple[str, dict] | None = field(default=None, repr=False)
+    # full receipt of the last streamed hop ({chunks, data_chunks,
+    # ref_chunks, sent_bytes, ...}) — benches/tests read the delta accounting
+    last_stream_receipt: dict | None = field(default=None, repr=False)
+    # test hook: ask the receiver to abort after N chunks (fault injection)
+    _stream_fail_after: int | None = field(default=None, repr=False)
+
+    supports_hop_stream = True
 
     @classmethod
     def connect(cls, name: str, address, *, meta: dict | None = None) -> "RemoteNode":
@@ -101,6 +159,51 @@ class RemoteNode(Node):
                 leaves=int(result.get("leaves", 0)),
             )
         return result
+
+    def hop_stream(
+        self,
+        state: Any,
+        *,
+        step: int = 0,
+        chunk_bytes: int = 16 << 20,
+        changed_hint: dict | None = None,
+        src: str = "?",
+    ) -> RemoteStateRef:
+        """Stream ``state`` directly to this node's process (paper §Q5).
+
+        Opens a dedicated socket (the control connection stays clean for
+        concurrent calls), pipelines chunk frames, and returns the resident
+        receipt. When a previous streamed hop to this node is still resident,
+        only changed chunks travel (delta against the cached baseline).
+        Raises ``repro.fabric.stream.StreamHopError`` on any failure — the
+        caller (``dhp.hop``) falls back to the store-mediated path.
+        """
+        from repro.fabric.stream import send_state_stream
+
+        if self.client is None:
+            raise RuntimeError(f"remote node {self.name!r} is not connected")
+        baseline_token, baseline_grid = self._stream_baseline or (None, None)
+        receipt, sent_grid = send_state_stream(
+            self.client.address,
+            state,
+            src=src,
+            step=step,
+            chunk_bytes=chunk_bytes,
+            baseline_token=baseline_token,
+            baseline_grid=baseline_grid,
+            changed_hint=changed_hint,
+            **({"fail_after_chunks": self._stream_fail_after}
+               if self._stream_fail_after is not None else {}),
+        )
+        self._stream_baseline = (receipt["token"], sent_grid)
+        self.last_stream_receipt = receipt
+        return RemoteStateRef(
+            node=receipt.get("node", self.name),
+            token=receipt["token"],
+            step=int(receipt.get("step", 0)),
+            leaves=int(receipt.get("leaves", 0)),
+            via="stream",
+        )
 
     def close(self) -> None:
         if self.client is not None:

@@ -11,9 +11,15 @@ filesystem — the S3 analogue) plus an optional :class:`JobStore`, then serves:
                       gets a receipt {token, step, leaves} — bulk data never
                       crosses the control wire (Fig. 3: the CMI moved through
                       the store)
+    svc/hop_stream    the streaming transport (paper §Q5): the state arrives
+                      as bulk frames on THIS connection, assembled chunk by
+                      chunk (``repro.fabric.stream``), and becomes resident
+                      without ever touching the disk; its chunk-hash grid is
+                      cached so a later hop can delta against it
     svc/fetch         re-publish a resident state into the store as a fresh
                       CMI so another node can hop it onward
     svc/drop          discard a resident state
+    svc/renew_lease   heartbeat: extend the caller's jobstore lease
     svc/list_jobs     ┐
     svc/get_job       ├ the paper's three job services (§3.3), job records
     svc/publish_job   ┘ as plain JSON dicts
@@ -35,7 +41,7 @@ from typing import Any
 
 from repro.core.jobstore import JobStore
 from repro.core.nbs import NBS
-from repro.fabric import wire
+from repro.fabric import stream, wire
 from repro.utils import logger
 
 
@@ -52,6 +58,9 @@ class NodeServer:
         self.node_name = node_name
         self.jobstore = jobstore
         self.resident: dict[str, tuple[Any, int]] = {}  # token -> (state, step)
+        # token -> (path, bslice) -> hash, for states that arrived by stream;
+        # lets a later svc/hop_stream delta against the resident baseline
+        self.stream_grids: dict[str, dict[tuple, str]] = {}
         self._listener, self.address = wire.listen(address)
         self._stop = threading.Event()
         self._accept_thread: threading.Thread | None = None
@@ -98,11 +107,19 @@ class NodeServer:
 
     def _serve_conn(self, conn) -> None:
         with conn:
+            reader = wire.FrameReader(conn)  # reusable recv_into buffer
             while not self._stop.is_set():
                 try:
-                    req = wire.recv_msg(conn)
+                    req = reader.recv_msg()
                 except wire.WireError:
                     return  # peer hung up
+                if stream.is_stream_request(req):
+                    # the connection switches to bulk mode for one session;
+                    # on any error the session (and connection) dies without
+                    # anything becoming resident
+                    if not self._serve_hop_stream(conn, reader, req):
+                        return
+                    continue
                 resp = self._dispatch(req)
                 try:
                     payload = wire.encode(resp)
@@ -148,11 +165,12 @@ class NodeServer:
         if svc == "svc/fetch":
             return self._svc_fetch(**kwargs)
         if svc == "svc/drop":
+            self.stream_grids.pop(kwargs["token"], None)
             return {"dropped": self.resident.pop(kwargs["token"], None) is not None}
         if svc == "svc/shutdown":
             self._stop.set()
             return {"stopping": True}
-        if svc in ("svc/list_jobs", "svc/get_job", "svc/publish_job"):
+        if svc in ("svc/list_jobs", "svc/get_job", "svc/publish_job", "svc/renew_lease"):
             return self._svc_jobstore(svc, kwargs)
         # anything else the node registered locally (handlers must speak
         # plain data for this to work — the service-shaped contract)
@@ -183,6 +201,79 @@ class NodeServer:
         self.resident[token] = (state, step)
         return {"token": token, "step": step, "leaves": len(leaves), "node": self.node_name}
 
+    # -- hop_stream: the state arrives on the socket, not the disk ----------
+    def _serve_hop_stream(self, conn, reader: wire.FrameReader, req: Any) -> bool:
+        """One streaming session. Returns True iff the connection stays usable."""
+        rid = req.get("id")
+        kwargs = dict(req.get("kwargs") or {})
+        fail_after = kwargs.pop("fail_after_chunks", None)  # fault-injection hook
+
+        def lookup(token: str):
+            if token in self.resident and token in self.stream_grids:
+                return self.resident[token][0], self.stream_grids[token]
+            return None
+
+        try:
+            wire.send_msg(conn, {
+                "id": rid, "ok": True,
+                "result": {
+                    "accept": True,
+                    "baseline_ok": lookup(kwargs.get("baseline")) is not None
+                    if kwargs.get("baseline") else False,
+                },
+            })
+            state, step, grid, counters = stream.receive_state_stream(
+                reader, kwargs, baseline_lookup=lookup, fail_after_chunks=fail_after,
+            )
+        except Exception as e:
+            # a torn stream never becomes resident; best-effort error report,
+            # then drop the connection (its framing state is ambiguous)
+            logger.warning("hop_stream from %r failed: %s", kwargs.get("src"), e)
+            try:
+                wire.send_msg(conn, {
+                    "id": rid, "ok": False,
+                    "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc(),
+                })
+            except OSError:
+                pass
+            return False
+        import jax
+
+        token = stream.fresh_token()
+        if step == 0 and isinstance(state, dict):
+            # same convention as svc/hop: derive a display step from the
+            # state when the sender did not pass one
+            for key in ("step", "t"):
+                if key in state:
+                    try:
+                        step = int(state[key])
+                    except (TypeError, ValueError):
+                        pass
+                    break
+        self.resident[token] = (state, step)
+        self.stream_grids[token] = grid
+        self.nbs.plugins.emit("on_restart", node=self.node_name, cmi=None, step=step)
+        result = {
+            "token": token,
+            "step": step,
+            "leaves": len(jax.tree_util.tree_leaves(state)),
+            "node": self.node_name,
+            "chunks": counters["chunks"],
+        }
+        try:
+            wire.send_msg(conn, {"id": rid, "ok": True, "result": result})
+        except OSError:
+            # sender died between eos and receipt: don't strand the state
+            self.resident.pop(token, None)
+            self.stream_grids.pop(token, None)
+            return False
+        logger.info(
+            "svc/hop_stream: %d chunks from %s resident as %s (step %d)",
+            counters["chunks"], kwargs.get("src"), token, step,
+        )
+        return True
+
     def _svc_fetch(self, token: str, name: str | None = None, drop: bool = True) -> dict:
         from repro.checkpoint.serializer import SaveOptions
         from repro.core.cmi import save_cmi
@@ -198,6 +289,7 @@ class NodeServer:
         )
         if drop:
             self.resident.pop(token, None)
+            self.stream_grids.pop(token, None)
         return {"cmi": name, "step": step}
 
     # -- jobstore services --------------------------------------------------
@@ -209,5 +301,7 @@ class NodeServer:
         if svc == "svc/get_job":
             job = self.jobstore.svc_get_job(**kwargs)
             return None if job is None else job.to_json()
+        if svc == "svc/renew_lease":
+            return self.jobstore.renew_lease(**kwargs).to_json()
         job = self.jobstore.svc_publish_job(**kwargs)
         return job.to_json()

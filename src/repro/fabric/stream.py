@@ -1,0 +1,243 @@
+"""Streaming hop transport: pipeline a CMI node→node, bypassing the disk.
+
+The paper's §Q5 leaves hop transport open; PR 2 made every cross-process
+``dhp.hop`` store-mediated (serialize → fsync → COMMIT → re-read). For a
+*transient* migration that durability is pure overhead, so this module
+streams the state over the fabric socket instead:
+
+    sender                                   receiver (NodeServer)
+    ------                                   ---------------------
+    svc/hop_stream control request  ───────▶ validate, look up baseline
+                 ◀─────── accept {baseline_ok}
+    iter_state_chunks(tree):                 StateAssembler:
+      hash pool (bounded window)               bulk frame → target_view →
+      bulk frame per chunk  ──────────────▶      recv_into destination
+      (ref frames carry no payload)            ref chunk → copy from cached
+    eos bulk frame  ──────────────────────▶      baseline state
+                 ◀─────── final {token, step, …}
+
+Pipelining: the sender's hash pool stays ``window`` chunks ahead of the
+socket write, and the kernel socket buffer overlaps sender serialization
+with receiver deserialization — serialize → hash → send → receive →
+scatter all run concurrently on different chunks.
+
+Delta hops: the receiver caches each received state's chunk-hash grid with
+its resident token. A later hop naming that token as ``baseline`` sends
+only chunks whose hash changed (the sender compares against the grid it
+kept from its own last send; device ``changed_hint`` bitmaps from
+``core/delta.py`` can skip even the hashing). Unchanged chunks are resolved
+from the receiver's cached baseline state — the §Q3 incremental idea
+applied to the wire instead of the disk.
+
+Failure model: ANY stream failure (connection drop, CRC mismatch, receiver
+death, baseline divergence) raises on the sender, and ``dhp.hop`` falls
+back transparently to the store-mediated path. The receiver discards
+partial state on error — a half-streamed hop can never become resident.
+``publish`` never uses this path: durability stays with the disk protocol.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+import uuid
+from typing import Any, Callable, Mapping
+
+from repro.checkpoint.serializer import (
+    StateAssembler,
+    StreamStateError,
+    bslice_key,
+    iter_state_chunks,
+    state_stream_meta,
+)
+from repro.fabric import wire
+from repro.utils import logger
+
+HOP_STREAM_SVC = "svc/hop_stream"
+
+# Test hook: seconds to sleep between chunk sends (fault-injection windows).
+_CHUNK_PAUSE_ENV = "REPRO_STREAM_CHUNK_PAUSE_S"
+
+
+class StreamHopError(ConnectionError):
+    """Streaming hop failed; caller should fall back to the store path."""
+
+
+# ---------------------------------------------------------------------------
+# sender
+# ---------------------------------------------------------------------------
+
+
+def send_state_stream(
+    address,
+    state: Any,
+    *,
+    src: str = "?",
+    step: int = 0,
+    chunk_bytes: int = 16 << 20,
+    baseline_token: str | None = None,
+    baseline_grid: Mapping[tuple, str] | None = None,
+    changed_hint: Mapping[str, Any] | None = None,
+    hash_threads: int = 0,
+    timeout_s: float = 300.0,
+    fail_after_chunks: int | None = None,
+) -> tuple[dict, dict]:
+    """Stream ``state`` to the NodeServer at ``address``.
+
+    Returns ``(receipt, sent_grid)`` — the receipt names the resident token
+    on the receiver; ``sent_grid`` maps ``(path, bslice_key)`` to the hash
+    of every chunk in this state, which the caller should retain as the
+    baseline grid for the next delta hop to the same destination.
+
+    Raises :class:`StreamHopError` on any transport/validation failure; the
+    destination is guaranteed not to hold partial state in that case.
+    """
+    pause_s = float(os.environ.get(_CHUNK_PAUSE_ENV, "0") or 0)
+    try:
+        sock = wire.connect(address)
+    except OSError as e:
+        raise StreamHopError(f"cannot reach {tuple(address)}: {e}") from e
+    sent_grid: dict[tuple, str] = {}
+    try:
+        sock.settimeout(timeout_s)
+        reader = wire.FrameReader(sock)
+        meta = state_stream_meta(state)
+        req_kwargs = {
+            "src": src,
+            "step": int(step),
+            "meta": meta,
+            "baseline": baseline_token,
+        }
+        if fail_after_chunks is not None:  # fault-injection (tests)
+            req_kwargs["fail_after_chunks"] = int(fail_after_chunks)
+        wire.send_msg(sock, {"id": 1, "svc": HOP_STREAM_SVC, "kwargs": req_kwargs})
+        accept = reader.recv_msg()
+        if not (isinstance(accept, dict) and accept.get("ok")):
+            raise StreamHopError(f"stream rejected: {accept!r}")
+        baseline_ok = bool((accept.get("result") or {}).get("baseline_ok"))
+        use_baseline = baseline_grid if (baseline_ok and baseline_grid) else None
+        if baseline_token is not None and not baseline_ok:
+            logger.info("hop_stream: receiver dropped baseline %s; full stream", baseline_token)
+        n_chunks = n_data = 0
+        sent_bytes = 0
+        for ch in iter_state_chunks(
+            state,
+            chunk_bytes=chunk_bytes,
+            baseline=use_baseline,
+            changed_hint=changed_hint if use_baseline else None,
+            hash_threads=hash_threads,
+        ):
+            header = {
+                "path": ch.path,
+                "slice": ch.slice,
+                "hash": ch.hash,
+                "crc32": ch.crc32,
+                "ref": ch.ref,
+            }
+            wire.send_bulk(sock, header, ch.data if not ch.ref else b"")
+            sent_grid[(ch.path, bslice_key(ch.slice))] = ch.hash
+            n_chunks += 1
+            if not ch.ref:
+                n_data += 1
+                sent_bytes += ch.nbytes
+            if pause_s:
+                time.sleep(pause_s)
+        wire.send_bulk(sock, {"eos": True, "chunks": n_chunks})
+        final = reader.recv_msg()
+        if not (isinstance(final, dict) and final.get("ok")):
+            raise StreamHopError(f"stream failed on receiver: {final!r}")
+        receipt = dict(final.get("result") or {})
+        receipt.setdefault("chunks", n_chunks)
+        receipt["data_chunks"] = n_data
+        receipt["ref_chunks"] = n_chunks - n_data
+        receipt["sent_bytes"] = sent_bytes
+        logger.info(
+            "hop_stream %s -> %s: %d chunks (%d streamed, %d ref'd), %.1f MiB on the wire",
+            src, receipt.get("node", "?"), n_chunks, n_data, n_chunks - n_data,
+            sent_bytes / 2**20,
+        )
+        return receipt, sent_grid
+    except StreamHopError:
+        raise
+    except (OSError, wire.WireError, StreamStateError) as e:
+        raise StreamHopError(f"stream to {tuple(address)} failed: {e}") from e
+    finally:
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# receiver (runs inside NodeServer's connection thread)
+# ---------------------------------------------------------------------------
+
+
+def receive_state_stream(
+    reader: wire.FrameReader,
+    kwargs: Mapping[str, Any],
+    *,
+    baseline_lookup: Callable[[str], tuple[Any, Mapping[tuple, str]] | None] | None = None,
+    fail_after_chunks: int | None = None,
+) -> tuple[Any, int, dict[tuple, str], dict]:
+    """Consume one stream session's bulk frames off ``reader``.
+
+    Returns ``(state, step, hash_grid, counters)``. Raises on any validation
+    failure — the caller (NodeServer) reports the error and drops the
+    connection; nothing becomes resident.
+
+    ``baseline_lookup`` resolves a baseline token to ``(state, grid)`` from
+    the server's resident cache. ``fail_after_chunks`` is a fault-injection
+    hook (tests): abort the session after N chunks as a dying receiver would.
+    """
+    meta = kwargs["meta"]
+    step = int(kwargs.get("step", 0))
+    baseline = None
+    baseline_grid: Mapping[tuple, str] | None = None
+    token = kwargs.get("baseline")
+    if token is not None and baseline_lookup is not None:
+        hit = baseline_lookup(token)
+        if hit is not None:
+            baseline, baseline_grid = hit
+    asm = StateAssembler(meta, baseline=baseline, baseline_grid=baseline_grid)
+    n = 0
+    while True:
+        kind, header, payload_len = reader.read_frame_header()
+        if kind != "bulk":
+            raise wire.WireError(f"expected bulk frame mid-stream, got {header!r}")
+        if header.get("eos"):
+            if payload_len:
+                reader.read_payload(payload_len)
+            if int(header.get("chunks", n)) != n:
+                raise StreamStateError(
+                    f"stream truncated: got {n} chunks, sender counted {header.get('chunks')}"
+                )
+            break
+        bslice = header["slice"]
+        if header.get("ref"):
+            if payload_len:
+                reader.read_payload(payload_len)
+            asm.put(header["path"], bslice, ref=True, hash=header.get("hash"))
+        else:
+            dest = asm.target_view(header["path"], bslice)
+            if dest is not None and dest.nbytes == payload_len:
+                view = reader.read_payload(payload_len, into=dest)
+                asm.put(header["path"], bslice, view, hash=header.get("hash"),
+                        crc32=header.get("crc32"), inplace=True)
+            else:
+                view = reader.read_payload(payload_len)
+                asm.put(header["path"], bslice, view, hash=header.get("hash"),
+                        crc32=header.get("crc32"))
+        n += 1
+        if fail_after_chunks is not None and n >= fail_after_chunks:
+            raise StreamStateError(f"fault injection: aborting after {n} chunks")
+    state = asm.finish()
+    return state, step, asm.grid, {"chunks": n}
+
+
+def is_stream_request(req: Any) -> bool:
+    return isinstance(req, dict) and req.get("svc") == HOP_STREAM_SVC
+
+
+def fresh_token() -> str:
+    return f"res-{uuid.uuid4().hex[:12]}"

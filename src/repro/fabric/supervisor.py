@@ -90,12 +90,17 @@ class FabricSupervisor:
         serve_only: bool = False,
         wait: bool = True,
         extra_args: list[str] | None = None,
+        socket_path: str | None = None,
     ) -> WorkerHandle:
         """Provision a worker process and (unless ``wait=False``) wait for
         its server to answer. ``wait=False`` suits racing claimants that may
-        legitimately exit before ever being pinged."""
+        legitimately exit before ever being pinged. ``socket_path`` pins the
+        listen address — a replacement worker spawned at a dead worker's
+        path is a respawn-in-place, and clients reconnect transparently."""
         os.makedirs(self.socket_dir, exist_ok=True)
-        sock = os.path.join(self.socket_dir, f"{name}-{uuid.uuid4().hex[:6]}.sock")
+        sock = socket_path or os.path.join(
+            self.socket_dir, f"{name}-{uuid.uuid4().hex[:6]}.sock"
+        )
         ready = sock + ".ready"
         cmd = [
             self.python, "-m", "repro.fabric.worker",
@@ -244,6 +249,31 @@ class FabricSupervisor:
                         publish_every=publish_every, step_ms=step_ms, grace_s=grace_s,
                     )
                     continue
+            # lease-expiry watchdog: a worker that claimed the job but let
+            # its lease lapse (hung process — heartbeats stopped without the
+            # process dying) is reclaimed and replaced. Guarded on
+            # lease_owner == this incarnation so a fresh spawn that has not
+            # claimed yet is never shot over its predecessor's stale lease.
+            if (
+                job.lease_owner == name
+                and not job.leased()
+                and name in self.workers
+                and self.workers[name].alive()
+            ):
+                logger.warning(
+                    "worker %s let its lease on job %s expire; reclaiming", name, job_id
+                )
+                self.reclaim(name, notice=False)
+                reclaims += 1
+                if incarnation >= max_restarts:
+                    raise RuntimeError(f"exceeded {max_restarts} restarts")
+                incarnation += 1
+                name = f"{name.rsplit('-', 1)[0]}-{incarnation}"
+                self.spawn(
+                    name, job_id=job_id, steps=steps,
+                    publish_every=publish_every, step_ms=step_ms, grace_s=grace_s,
+                )
+                continue
             handle = self.workers.get(name)
             if handle is not None and not handle.alive():
                 rc = handle.proc.returncode

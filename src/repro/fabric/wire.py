@@ -1,6 +1,6 @@
 """Wire protocol for the NavP fabric: length-prefixed frames over sockets.
 
-Frame layout (everything big-endian)::
+Control frame layout (everything big-endian)::
 
     +----------------+-------+----------------------+
     | u32 body length| codec | body (length-1 bytes)|
@@ -12,10 +12,25 @@ JSON-only client in the same conversation. msgpack is used when importable
 (it handles ``bytes`` natively and is ~3x smaller for numeric payloads);
 otherwise JSON with a ``{"__bytes__": <base64>}`` escape.
 
-Payloads are *control-plane* data — service names, CMI names, job records,
-small numeric summaries. Bulk array data never crosses this wire: hops are
-store-mediated (the CMI travels through the shared filesystem / S3
-analogue), exactly like the paper's Figure 3/4 path.
+Control payloads are *control-plane* data — service names, CMI names, job
+records, small numeric summaries.
+
+Bulk frame layout (codec byte ``B``) — the data plane for streaming hops::
+
+    +----------------+-----+--------------+----------------+--------+---------+
+    | u32 body length| 'B' | header codec | u32 header len | header | payload |
+    +----------------+-----+--------------+----------------+--------+---------+
+
+The header is a small control-codec dict (chunk slice, hash, crc); the
+payload is raw array bytes, sent verbatim (no JSON/base64 round-trip, no
+msgpack re-framing) and received with ``recv_into`` — straight into the
+destination buffer when the receiver can supply one. This is what lets a
+``dhp.hop`` stream its CMI node→node without store-mediating (paper §Q5).
+
+Receiving is done through :class:`FrameReader`, which owns one reusable
+buffer per connection: control bodies and bulk headers are read with
+``recv_into`` into that buffer (no per-frame ``bytes`` accumulation), and
+bulk payloads can be read directly into caller-provided memory.
 """
 
 from __future__ import annotations
@@ -37,8 +52,9 @@ except Exception:  # pragma: no cover - exercised only without msgpack
 _LEN = struct.Struct(">I")
 CODEC_JSON = b"J"
 CODEC_MSGPACK = b"M"
-# Control-plane frames are small; anything past this is a corrupt length
-# prefix or a misdirected bulk transfer.
+CODEC_BULK = b"B"
+# Anything past this is a corrupt length prefix. Bulk frames carry one chunk
+# (~chunk_bytes) each, so even the data plane stays well under the cap.
 MAX_FRAME = 256 << 20
 
 
@@ -70,27 +86,30 @@ def _json_object_hook(d: dict) -> Any:
     return d
 
 
+def _encode_obj(obj: Any, *, prefer_msgpack: bool = True) -> tuple[bytes, bytes]:
+    """Serialize ``obj`` to ``(codec byte, body bytes)`` without framing."""
+    if _HAVE_MSGPACK and prefer_msgpack:
+        return CODEC_MSGPACK, msgpack.packb(obj, use_bin_type=True, default=_json_default)
+    return CODEC_JSON, json.dumps(obj, default=_json_default).encode("utf-8")
+
+
 def encode(obj: Any, *, prefer_msgpack: bool = True) -> bytes:
     """Serialize ``obj`` into a framed message (length + codec + body)."""
-    if _HAVE_MSGPACK and prefer_msgpack:
-        body = msgpack.packb(obj, use_bin_type=True, default=_json_default)
-        codec = CODEC_MSGPACK
-    else:
-        body = json.dumps(obj, default=_json_default).encode("utf-8")
-        codec = CODEC_JSON
+    codec, body = _encode_obj(obj, prefer_msgpack=prefer_msgpack)
     if len(body) + 1 > MAX_FRAME:
         raise WireError(f"frame too large: {len(body)} bytes")
     return _LEN.pack(len(body) + 1) + codec + body
 
 
-def decode_body(codec: bytes, body: bytes) -> Any:
+def decode_body(codec: bytes, body) -> Any:
     try:
         if codec == CODEC_MSGPACK:
             if not _HAVE_MSGPACK:
                 raise WireError("peer sent msgpack but msgpack is unavailable")
             return msgpack.unpackb(body, raw=False)
         if codec == CODEC_JSON:
-            return json.loads(body.decode("utf-8"), object_hook=_json_object_hook)
+            text = bytes(body) if isinstance(body, memoryview) else body
+            return json.loads(text.decode("utf-8"), object_hook=_json_object_hook)
     except WireError:
         raise
     except Exception as e:
@@ -100,26 +119,107 @@ def decode_body(codec: bytes, body: bytes) -> Any:
     raise WireError(f"unknown codec byte {codec!r}")
 
 
-def _recv_exact(sock: socket.socket, n: int) -> bytes:
-    buf = bytearray()
-    while len(buf) < n:
-        chunk = sock.recv(n - len(buf))
-        if not chunk:
-            raise WireError("connection closed mid-frame")
-        buf.extend(chunk)
-    return bytes(buf)
-
-
 def send_msg(sock: socket.socket, obj: Any) -> None:
     sock.sendall(encode(obj))
 
 
+_BULK_HDR = struct.Struct(">cI")  # header codec byte + header length
+
+
+def send_bulk(sock: socket.socket, header: Any, payload=b"") -> None:
+    """Send one bulk frame: small control-codec ``header`` + raw ``payload``.
+
+    ``payload`` may be ``bytes`` or a ``memoryview``; it is written to the
+    socket verbatim (two ``sendall`` calls, no copy of the payload).
+    """
+    hcodec, hbody = _encode_obj(header)
+    n_payload = payload.nbytes if isinstance(payload, memoryview) else len(payload)
+    length = 1 + _BULK_HDR.size + len(hbody) + n_payload
+    if length > MAX_FRAME:
+        raise WireError(f"bulk frame too large: {length} bytes")
+    sock.sendall(_LEN.pack(length) + CODEC_BULK + _BULK_HDR.pack(hcodec, len(hbody)) + hbody)
+    if n_payload:
+        sock.sendall(payload)
+
+
+class FrameReader:
+    """Per-connection receiver with one reusable ``recv_into`` buffer.
+
+    Control frames and bulk headers are read into the internal buffer (grown
+    geometrically, never shrunk — no per-frame ``bytes`` allocation on the
+    steady state). Bulk payloads are exposed in two steps so the caller can
+    direct them into their final destination::
+
+        kind, obj, payload_len = reader.read_frame_header()
+        if kind == "bulk":
+            view = reader.read_payload(payload_len, into=dest_memoryview)
+
+    With ``into=None`` the payload lands in the reusable buffer and the
+    returned memoryview is only valid until the next read.
+    """
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self._buf = bytearray(64 << 10)
+
+    def _recv_into(self, view: memoryview) -> None:
+        pos, n = 0, view.nbytes
+        while pos < n:
+            got = self.sock.recv_into(view[pos:])
+            if not got:
+                raise WireError("connection closed mid-frame")
+            pos += got
+
+    def _scratch(self, n: int) -> memoryview:
+        if len(self._buf) < n:
+            self._buf = bytearray(max(n, 2 * len(self._buf)))
+        view = memoryview(self._buf)[:n]
+        self._recv_into(view)
+        return view
+
+    def read_frame_header(self):
+        """Read one frame's prefix.
+
+        Returns ``("msg", obj, 0)`` for a fully-consumed control frame, or
+        ``("bulk", header_obj, payload_len)`` with the payload still on the
+        socket — the caller MUST follow with :meth:`read_payload`.
+        """
+        head = memoryview(self._buf)[: _LEN.size]
+        self._recv_into(head)
+        (length,) = _LEN.unpack(head)
+        if length == 0 or length > MAX_FRAME:
+            raise WireError(f"bad frame length {length}")
+        codec = self._scratch(1)[0:1].tobytes()
+        if codec != CODEC_BULK:
+            body = self._scratch(length - 1)
+            return "msg", decode_body(codec, body), 0
+        bh = self._scratch(_BULK_HDR.size)
+        hcodec, hlen = _BULK_HDR.unpack(bh)
+        if 1 + _BULK_HDR.size + hlen > length:
+            raise WireError(f"bulk header overruns frame ({hlen} > {length})")
+        header = decode_body(hcodec, self._scratch(hlen))
+        return "bulk", header, length - 1 - _BULK_HDR.size - hlen
+
+    def read_payload(self, n: int, into: memoryview | None = None) -> memoryview:
+        """Read ``n`` payload bytes — into ``into`` when given (its size must
+        be exactly ``n``), else into the reusable scratch buffer."""
+        if into is not None:
+            if into.nbytes != n:
+                raise WireError(f"payload target is {into.nbytes} bytes, need {n}")
+            self._recv_into(into)
+            return into
+        return self._scratch(n)
+
+    def recv_msg(self) -> Any:
+        """Read one control frame (bulk frames are a protocol error here)."""
+        kind, obj, payload_len = self.read_frame_header()
+        if kind != "msg":
+            raise WireError("unexpected bulk frame on control channel")
+        return obj
+
+
 def recv_msg(sock: socket.socket) -> Any:
-    (length,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
-    if length == 0 or length > MAX_FRAME:
-        raise WireError(f"bad frame length {length}")
-    payload = _recv_exact(sock, length)
-    return decode_body(payload[:1], payload[1:])
+    return FrameReader(sock).recv_msg()
 
 
 # ---------------------------------------------------------------------------
@@ -152,7 +252,29 @@ def listen(address) -> tuple[socket.socket, tuple]:
     kind = address[0]
     if kind == "unix":
         sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-        sock.bind(address[1])
+        try:
+            sock.bind(address[1])
+        except OSError as e:
+            import errno
+            import os
+
+            if e.errno != errno.EADDRINUSE:
+                raise
+            # Path exists: either a stale socket from a SIGKILLed
+            # predecessor (replacement re-binding in place) or a LIVE
+            # server. Probe before unlinking — stealing a live server's
+            # path would split-brain the node.
+            probe = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            try:
+                probe.connect(address[1])
+            except OSError:
+                pass  # nobody answering: stale, safe to reclaim
+            else:
+                raise  # live server on this path; surface EADDRINUSE
+            finally:
+                probe.close()
+            os.unlink(address[1])
+            sock.bind(address[1])
         sock.listen(16)
         return sock, ("unix", address[1])
     if kind == "tcp":

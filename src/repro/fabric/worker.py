@@ -31,6 +31,7 @@ import argparse
 import json
 import os
 import sys
+import threading
 import time
 from pathlib import Path
 from typing import Any
@@ -38,7 +39,7 @@ from typing import Any
 import numpy as np
 
 from repro.core.dhp import DHP
-from repro.core.jobstore import STATUS_CKPT, STATUS_FINISHED, JobStore
+from repro.core.jobstore import STATUS_CKPT, STATUS_FINISHED, JobStore, LeaseLost
 from repro.core.nbs import NBS
 from repro.core.preemption import PreemptionNotice
 from repro.fabric.server import NodeServer
@@ -66,6 +67,31 @@ def job_step(state: dict[str, Any]) -> dict[str, Any]:
     return {"w": w, "t": t + 1}
 
 
+def start_lease_heartbeat(
+    jobstore: JobStore, job_id: str, worker: str, lease_s: float
+) -> threading.Event:
+    """Renew the lease at ``lease_s / 3`` cadence until the returned Event is
+    set. A healthy-but-slow worker therefore never loses its job to a lease
+    steal; a hung or killed one stops renewing and the lease expires on its
+    own, letting another claimant (or the supervisor) take over."""
+    stop = threading.Event()
+
+    def beat() -> None:
+        interval = max(0.2, lease_s / 3.0)
+        while not stop.wait(interval):
+            try:
+                jobstore.renew_lease(job_id, worker, lease_s)
+            except LeaseLost as e:
+                logger.warning("worker %s lost lease on job %s: %s", worker, job_id, e)
+                return
+            except Exception:
+                logger.exception("lease heartbeat failed for job %s", job_id)
+                return
+
+    threading.Thread(target=beat, name="lease-heartbeat", daemon=True).start()
+    return stop
+
+
 def run_job_loop(
     dhp: DHP,
     jobstore: JobStore,
@@ -86,6 +112,28 @@ def run_job_loop(
     if job.status == STATUS_FINISHED:
         logger.info("worker %s: job %s already finished", worker_name, job.job_id)
         return EXIT_FINISHED
+    heartbeat = start_lease_heartbeat(jobstore, job.job_id, worker_name, lease_s)
+    try:
+        return _run_claimed_job(
+            dhp, jobstore, notice, job,
+            worker_name=worker_name, steps=steps,
+            publish_every=publish_every, step_ms=step_ms,
+        )
+    finally:
+        heartbeat.set()
+
+
+def _run_claimed_job(
+    dhp: DHP,
+    jobstore: JobStore,
+    notice: PreemptionNotice,
+    job,
+    *,
+    worker_name: str,
+    steps: int,
+    publish_every: int,
+    step_ms: float,
+) -> int:
     if job.status == STATUS_CKPT and job.cmi is not None:
         state, _ = dhp.restart(job.job_id)
         logger.info(

@@ -248,3 +248,123 @@ def test_supervisor_respawns_on_crash(fab):
     t.join(timeout=10)
     assert out["incarnations"] >= 2
     assert js.read_job(job.job_id).status == STATUS_FINISHED
+
+
+# ---------------------------------------------------------------------------
+# streaming hops (svc/hop_stream): disk-bypassing transport + fallback
+# ---------------------------------------------------------------------------
+
+
+def _fetch_state(nbs, token):
+    fetched = nbs.call("W", "svc/fetch", token=token, drop=False)
+    state, _ = restore_cmi(nbs.hop_root, fetched["cmi"])
+    return state
+
+
+def test_stream_hop_bypasses_disk_bit_identical(fab, tmp_path):
+    """via="auto" against a process-backed node streams: no hop-CMI ever
+    touches the store, and the fetched state is bit-identical."""
+    sup, _ = fab
+    handle = sup.spawn("W", serve_only=True)
+    nbs = NBS(tmp_path / "s3")
+    nbs.add_node("A", mesh=None)
+    nbs.add_remote_node("W", handle.address)
+    dhp = DHP(nbs, "A", chunk_bytes=1 << 14)
+
+    src = {"x": np.random.default_rng(1).standard_normal((500, 64)), "step": 9}
+    ref = dhp.hop(dict(src), "W")
+    assert isinstance(ref, RemoteStateRef) and ref.via == "stream"
+    assert ref.step == 9 and dhp.node == "W"
+    # the whole point: nothing transited the shared store
+    assert list(nbs.hop_root.iterdir()) == []
+
+    back = _fetch_state(nbs, ref.token)
+    assert back["x"].tobytes() == src["x"].tobytes() and back["step"] == 9
+
+
+def test_stream_delta_second_hop_sends_only_changed_chunks(fab, tmp_path):
+    sup, _ = fab
+    handle = sup.spawn("W", serve_only=True)
+    nbs = NBS(tmp_path / "s3")
+    nbs.add_node("A", mesh=None)
+    wnode = nbs.add_remote_node("W", handle.address)
+    dhp = DHP(nbs, "A", chunk_bytes=1 << 14)  # 16 KiB chunks
+
+    src = {"x": np.random.default_rng(2).standard_normal((1000, 64))}
+    dhp.hop(dict(src), "W")
+    full = dict(wnode.last_stream_receipt)
+    assert full["ref_chunks"] == 0
+
+    # mutate ~10% of the rows; the repeat hop deltas against the resident
+    src2 = {"x": src["x"].copy()}
+    src2["x"][:100] += 1.0
+    ref2 = dhp.hop(dict(src2), "W")
+    delta = dict(wnode.last_stream_receipt)
+    assert ref2.via == "stream"
+    assert delta["ref_chunks"] > 0 and delta["data_chunks"] < full["data_chunks"] / 2
+    assert delta["sent_bytes"] < full["sent_bytes"] / 2
+
+    back = _fetch_state(nbs, ref2.token)
+    assert back["x"].tobytes() == src2["x"].tobytes()
+
+
+def test_stream_failure_falls_back_to_store_transparently(fab, tmp_path):
+    """Receiver aborts mid-stream (fault injection, as a dying receiver
+    would): dhp.hop transparently retries via the store-mediated path and
+    the state still lands bit-identical."""
+    sup, _ = fab
+    handle = sup.spawn("W", serve_only=True)
+    nbs = NBS(tmp_path / "s3")
+    nbs.add_node("A", mesh=None)
+    wnode = nbs.add_remote_node("W", handle.address)
+    wnode._stream_fail_after = 2  # receiver dies after 2 chunks, every time
+    dhp = DHP(nbs, "A", chunk_bytes=1 << 14)
+
+    src = {"x": np.random.default_rng(3).standard_normal((500, 64)), "step": 4}
+    ref = dhp.hop(dict(src), "W")  # via=auto -> stream -> fallback
+    assert isinstance(ref, RemoteStateRef) and ref.via == "store"
+    assert ref.step == 4
+    back = _fetch_state(nbs, ref.token)
+    assert back["x"].tobytes() == src["x"].tobytes()
+    # nothing half-streamed became resident: only the store-hop state lives
+    assert nbs.call("W", "svc/ping")["resident"] == 1
+
+
+def test_stream_midkill_falls_back_to_respawned_worker(fab, tmp_path):
+    """SIGKILL the destination worker mid-stream. The sender's stream fails;
+    a replacement worker comes up at the SAME socket path (respawn-in-place);
+    the transparent store-mediated fallback reconnects and completes, and
+    the state is bit-identical."""
+    import threading
+
+    sup, _ = fab
+    sock_path = os.path.join(sup.socket_dir, "W-fixed.sock")
+    handle = sup.spawn("W", serve_only=True, socket_path=sock_path)
+    nbs = NBS(tmp_path / "s3")
+    nbs.add_node("A", mesh=None)
+    nbs.add_remote_node("W", handle.address)
+    # ~256 chunks of 16 KiB with a 20 ms pause between sends: a multi-second
+    # kill window no scheduler hiccup can miss
+    dhp = DHP(nbs, "A", chunk_bytes=1 << 14)
+    src = {"x": np.random.default_rng(4).standard_normal((4096, 64)), "step": 8}
+
+    killed = threading.Event()
+
+    def assassin():
+        time.sleep(0.5)  # stream setup + first chunks are long gone by now
+        sup.reclaim("W", notice=False)  # SIGKILL, no notice
+        sup.spawn("W", serve_only=True, socket_path=sock_path)
+        killed.set()
+
+    t = threading.Thread(target=assassin, daemon=True)
+    t.start()
+    os.environ["REPRO_STREAM_CHUNK_PAUSE_S"] = "0.02"
+    try:
+        ref = dhp.hop(dict(src), "W")
+    finally:
+        os.environ.pop("REPRO_STREAM_CHUNK_PAUSE_S", None)
+        t.join(timeout=30)
+    assert killed.is_set(), "worker was never killed mid-stream"
+    assert isinstance(ref, RemoteStateRef) and ref.via == "store"
+    back = _fetch_state(nbs, ref.token)
+    assert back["x"].tobytes() == src["x"].tobytes() and back["step"] == 8

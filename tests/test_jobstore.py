@@ -78,3 +78,69 @@ def test_interrupted_job_without_cmi_returns_to_new(tmp_path):
     store.svc_get_job(j.job_id, worker="w")
     job = store.release(j.job_id, to_status=STATUS_NEW)
     assert job.status == STATUS_NEW and not job.leased()
+
+
+# ---------------------------------------------------------------------------
+# lease heartbeats + expired-lease stealing (ROADMAP item c)
+# ---------------------------------------------------------------------------
+
+
+def test_renew_lease_extends_and_guards_owner(tmp_path):
+    import time
+
+    from repro.core.jobstore import LeaseLost
+
+    store = JobStore(tmp_path)
+    j = store.create_job({})
+    store.svc_get_job(j.job_id, worker="w1", lease_s=0.5)
+    store.renew_lease(j.job_id, "w1", lease_s=60.0)  # heartbeat
+    assert store.read_job(j.job_id).lease_expiry > time.time() + 30
+    with pytest.raises(LeaseLost):
+        store.renew_lease(j.job_id, "rival", lease_s=60.0)
+    # renewals do not spam history (heartbeat cadence would dominate it)
+    events = [h["event"] for h in store.read_job(j.job_id).history]
+    assert events == ["leased:w1"]
+
+
+def test_two_claimants_expired_lease_is_stolen(tmp_path):
+    """Regression for lease stealing: while w1's lease is live a polite
+    (steal=False) rival gets nothing; once the lease expires without a
+    heartbeat the rival claims the job without any explicit release."""
+    import time
+
+    store = JobStore(tmp_path)
+    j = store.create_job({})
+    won = store.svc_get_job(j.job_id, worker="w1", lease_s=0.4, steal=False)
+    assert won.lease_owner == "w1"
+    # live lease: the rival is refused
+    assert store.svc_get_job(j.job_id, worker="w2", steal=False) is None
+    assert store.svc_get_job(worker="w2") is None  # claim-next also refuses
+    # w1 stalls (no heartbeat) -> lease expires -> rival takes over
+    time.sleep(0.5)
+    stolen = store.svc_get_job(j.job_id, worker="w2", steal=False)
+    assert stolen is not None and stolen.lease_owner == "w2"
+    # the stalled worker's next heartbeat must fail loudly
+    from repro.core.jobstore import LeaseLost
+
+    with pytest.raises(LeaseLost):
+        store.renew_lease(j.job_id, "w1")
+
+
+def test_heartbeat_thread_keeps_lease_alive(tmp_path):
+    """A slow-but-healthy worker heartbeating at lease_s/3 never loses its
+    job, even when each 'step' takes longer than the lease."""
+    import time
+
+    from repro.fabric.worker import start_lease_heartbeat
+
+    store = JobStore(tmp_path)
+    j = store.create_job({})
+    store.svc_get_job(j.job_id, worker="w1", lease_s=0.6)
+    stop = start_lease_heartbeat(store, j.job_id, "w1", lease_s=0.6)
+    try:
+        deadline = time.time() + 1.5  # >2 lease lifetimes
+        while time.time() < deadline:
+            assert store.svc_get_job(j.job_id, worker="rival", steal=False) is None
+            time.sleep(0.1)
+    finally:
+        stop.set()

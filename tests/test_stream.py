@@ -1,0 +1,236 @@
+"""Streaming hop plumbing: bulk wire frames, the reusable recv_into reader,
+and the shared chunk engine (iter_state_chunks / assemble_state_chunks).
+
+Process-level streaming (svc/hop_stream against a live worker, kill-tested
+fallback) lives in tests/test_fabric.py; this file covers the layers below
+it in-process, where failures are cheap to localise.
+"""
+
+import socket
+import threading
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.serializer import (
+    StateAssembler,
+    StreamStateError,
+    assemble_state_chunks,
+    bslice_key,
+    iter_state_chunks,
+    state_stream_meta,
+)
+from repro.fabric import wire
+
+
+def _sock_pair():
+    a, b = socket.socketpair()
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# wire: bulk frames + FrameReader
+# ---------------------------------------------------------------------------
+
+
+def test_bulk_frame_roundtrip_and_reader_interleave():
+    a, b = _sock_pair()
+    reader = wire.FrameReader(b)
+    payload = np.arange(10000, dtype=np.float64).tobytes()
+    try:
+        wire.send_msg(a, {"svc": "svc/ping", "id": 1})
+        wire.send_bulk(a, {"path": "x", "seq": 0}, payload)
+        wire.send_bulk(a, {"eos": True}, b"")
+        wire.send_msg(a, {"id": 2, "ok": True})
+
+        assert reader.recv_msg() == {"svc": "svc/ping", "id": 1}
+        kind, header, n = reader.read_frame_header()
+        assert kind == "bulk" and header == {"path": "x", "seq": 0} and n == len(payload)
+        got = reader.read_payload(n)
+        assert bytes(got) == payload
+        kind, header, n = reader.read_frame_header()
+        assert kind == "bulk" and header == {"eos": True} and n == 0
+        assert reader.recv_msg() == {"id": 2, "ok": True}
+    finally:
+        a.close()
+        b.close()
+
+
+def test_reader_payload_into_destination_no_copy():
+    """read_payload(into=...) must land bytes directly in the caller's
+    buffer — the receive path's zero-copy contract."""
+    a, b = _sock_pair()
+    reader = wire.FrameReader(b)
+    src = np.random.default_rng(0).standard_normal(4096)
+    dest = np.empty_like(src)
+    try:
+        wire.send_bulk(a, {"p": 1}, memoryview(src).cast("B"))
+        kind, header, n = reader.read_frame_header()
+        view = reader.read_payload(n, into=memoryview(dest).cast("B"))
+        # the returned view IS the destination buffer, not a copy
+        assert view.obj is dest
+        assert dest.tobytes() == src.tobytes()
+    finally:
+        a.close()
+        b.close()
+
+
+def test_reader_reuses_buffer_across_large_frames():
+    """Control frames must not allocate per frame: after the buffer grows to
+    fit the largest frame, subsequent frames reuse the same bytearray."""
+    a, b = _sock_pair()
+    reader = wire.FrameReader(b)
+    big = {"blob": b"\x01" * (1 << 20)}
+
+    def feed():
+        for _ in range(4):
+            wire.send_msg(a, big)
+
+    t = threading.Thread(target=feed)
+    t.start()
+    try:
+        assert reader.recv_msg() == big
+        buf_after_growth = id(reader._buf)
+        for _ in range(3):
+            assert reader.recv_msg() == big
+            assert id(reader._buf) == buf_after_growth  # no per-frame realloc
+    finally:
+        t.join()
+        a.close()
+        b.close()
+
+
+def test_bulk_header_overrun_rejected():
+    a, b = _sock_pair()
+    reader = wire.FrameReader(b)
+    try:
+        # hand-build a bulk frame whose header length exceeds the frame
+        import struct
+
+        hbody = b"{}"
+        frame = b"B" + struct.pack(">cI", b"J", 10_000) + hbody
+        a.sendall(struct.pack(">I", len(frame)) + frame)
+        with pytest.raises(wire.WireError, match="overruns"):
+            reader.read_frame_header()
+    finally:
+        a.close()
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# chunk engine: iter/assemble
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    rng = np.random.default_rng(7)
+    return {
+        "w": rng.standard_normal((300, 40)).astype(np.float32),
+        "nested": {"b": np.arange(17, dtype=np.int64), "z": np.float64(2.5) * np.ones(())},
+        "scalars": {"n": 3, "s": "hi", "t": (1, [2, None])},
+    }
+
+
+def test_iter_assemble_roundtrip_bit_identical():
+    tree = _tree()
+    meta = state_stream_meta(tree)
+    chunks = list(iter_state_chunks(tree, chunk_bytes=4096))
+    assert [c.seq for c in chunks] == list(range(len(chunks)))  # ordered
+    out, grid = assemble_state_chunks(meta, chunks)
+    assert out["w"].tobytes() == tree["w"].tobytes()
+    assert out["nested"]["b"].tobytes() == tree["nested"]["b"].tobytes()
+    assert out["scalars"] == {"n": 3, "s": "hi", "t": (1, [2, None])}
+    assert len(grid) == len(chunks)
+
+
+def test_delta_stream_sends_only_changed_chunks():
+    tree = _tree()
+    first = list(iter_state_chunks(tree, chunk_bytes=4096))
+    baseline_state, grid = assemble_state_chunks(state_stream_meta(tree), first)
+    sender_grid = {(c.path, bslice_key(c.slice)): c.hash for c in first}
+
+    tree2 = {**tree, "w": tree["w"].copy()}
+    tree2["w"][:30] += 1.0  # one 4 KiB chunk of rows (25 rows/chunk @ 160B/row)
+    second = list(iter_state_chunks(tree2, chunk_bytes=4096, baseline=sender_grid))
+    data = [c for c in second if not c.ref]
+    refs = [c for c in second if c.ref]
+    assert refs and len(data) < len(second) / 2
+    assert all(c.data is None for c in refs)
+
+    out, _ = assemble_state_chunks(
+        state_stream_meta(tree2), second, baseline=baseline_state, baseline_grid=grid
+    )
+    assert out["w"].tobytes() == tree2["w"].tobytes()
+
+
+def test_changed_hint_skips_hashing_entirely():
+    tree = _tree()
+    first = list(iter_state_chunks(tree, chunk_bytes=4096))
+    sender_grid = {(c.path, bslice_key(c.slice)): c.hash for c in first}
+    n_w = sum(1 for c in first if c.path == "w")
+    hint = np.zeros(n_w, dtype=bool)
+    hint[0] = True  # device says: only the first chunk of w changed
+    tree2 = {**tree, "w": tree["w"].copy()}
+    tree2["w"][:5] += 1.0
+    chunks = list(
+        iter_state_chunks(
+            tree2, chunk_bytes=4096, baseline=sender_grid, changed_hint={"w": hint}
+        )
+    )
+    hinted_refs = [c for c in chunks if c.path == "w" and c.ref]
+    assert len(hinted_refs) == n_w - 1
+    # hint-refs never touched the hash pool: crc32 is None, hash reused
+    assert all(c.crc32 is None for c in hinted_refs)
+    assert all(sender_grid[(c.path, bslice_key(c.slice))] == c.hash for c in hinted_refs)
+
+
+def test_assembler_rejects_bad_crc_and_partial_coverage():
+    tree = {"x": np.arange(100, dtype=np.float32)}
+    meta = state_stream_meta(tree)
+    chunks = list(iter_state_chunks(tree, chunk_bytes=64))
+    asm = StateAssembler(meta)
+    ch = chunks[0]
+    with pytest.raises(StreamStateError, match="CRC"):
+        asm.put(ch.path, ch.slice, b"\x00" * ch.nbytes, crc32=ch.crc32, hash=ch.hash)
+    # drop one chunk -> finish() must refuse the torn state
+    asm2 = StateAssembler(meta)
+    for ch in chunks[:-1]:
+        asm2.put(ch.path, ch.slice, ch.data, crc32=ch.crc32, hash=ch.hash, ref=ch.ref)
+    with pytest.raises(StreamStateError, match="cover"):
+        asm2.finish()
+
+
+def test_assembler_ref_without_baseline_fails():
+    tree = {"x": np.arange(100, dtype=np.float32)}
+    chunks = list(iter_state_chunks(tree, chunk_bytes=64))
+    asm = StateAssembler(state_stream_meta(tree))
+    with pytest.raises(StreamStateError, match="baseline"):
+        asm.put(chunks[0].path, chunks[0].slice, ref=True, hash=chunks[0].hash)
+
+
+def test_save_and_stream_share_one_grid():
+    """The on-disk chunk table and the streamed chunk grid must agree — the
+    delta hint grid feeds both (docs/checkpoint_format.md invariant)."""
+    import tempfile
+
+    from repro.checkpoint.serializer import load_manifest, save_checkpoint, SaveOptions
+
+    tree = _tree()
+    with tempfile.TemporaryDirectory() as root:
+        save_checkpoint(root, "c", tree, options=SaveOptions(chunk_bytes=4096, writers=2))
+        man = load_manifest(root, "c")
+        disk_keys = {
+            (apath, bslice_key(c.slice))
+            for apath, entry in man.arrays.items()
+            for c in entry.chunks
+        }
+        disk_hashes = {
+            (apath, bslice_key(c.slice)): c.hash
+            for apath, entry in man.arrays.items()
+            for c in entry.chunks
+        }
+    streamed = list(iter_state_chunks(tree, chunk_bytes=4096))
+    stream_keys = {(c.path, bslice_key(c.slice)) for c in streamed}
+    assert disk_keys == stream_keys
+    for c in streamed:
+        assert disk_hashes[(c.path, bslice_key(c.slice))] == c.hash
