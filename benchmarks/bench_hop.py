@@ -19,6 +19,16 @@ to move state between nodes:
                   rows: only changed chunks travel (hash delta against the
                   receiver's cached baseline).
 
+Plus the composed experiment — a 3-node, 3-stage remote itinerary (Fig. 8:
+read on W, compute on W2, write on W3, product back to the driver):
+
+``tour_stream``   every leg streamed: hop in, worker-initiated relays
+                  between stages (svc/relay), streamed fetch back — the
+                  store is never touched.
+``tour_store``    the same tour with ``via="store"``: each leg is a
+                  checkpoint -> shared store -> restore round-trip. The
+                  ratio is the end-to-end cost of store-chaining a tour.
+
 Trials are interleaved across configs (config A trial 1, config B trial 1,
 ..., config A trial 2, ...) so filesystem cache state and background noise
 spread evenly instead of biasing whichever config runs last.
@@ -54,7 +64,11 @@ ENV_NOTES = (
     "path moves the same chunks over a unix socket (memory to memory) with "
     "hashing pipelined against the send, so its win here combines transport "
     "and filesystem avoidance. Delta hops resend only chunks whose blake2b "
-    "changed vs the receiver's cached baseline."
+    "changed vs the receiver's cached baseline. The tour configs chain a "
+    "3-stage remote itinerary across 3 worker processes: tour_stream keeps "
+    "every leg on the wire (hop in, svc/relay node-to-node, streamed fetch "
+    "back -- the store is never touched); tour_store checkpoints/restores "
+    "through the shared store on every leg."
 )
 
 
@@ -77,18 +91,22 @@ def bench(
     n = n_mb * MB // 4 // 256
     make_state = lambda: {"x": jnp.asarray(rng.standard_normal((n, 256)), jnp.float32)}  # noqa: E731
     nbytes = tree_nbytes(make_state())
+    tour_n = max(1, n // 2)  # tour state is float64: halve rows for equal MB
     chunk_bytes = chunk_mb * MB
     root = tempfile.mkdtemp(prefix="bench-hop-")
     sup = None
     times: dict[str, list[float]] = {"hop_live": [], "hop_store": []}
     stream_stats: dict = {}
     stream_fallbacks = 0
+    tour_fallbacks = 0
     try:
         nbs = NBS(root)
         mesh = jax.make_mesh((1,), ("data",))
         nbs.add_node("A", mesh=mesh)
         nbs.add_node("B", mesh=mesh)
         nbs.add_node("C", mesh=None)  # store-hop dest (no mesh -> store path)
+        hop_vias: list[str] = []  # per-tour transport log (fallback detection)
+        nbs.plugins.subscribe("on_hop", lambda **kw: hop_vias.append(kw["via"]))
         if xproc:
             try:
                 from repro.fabric.supervisor import FabricSupervisor
@@ -99,6 +117,11 @@ def bench(
                 times["hop_xproc"] = []
                 times["hop_stream"] = []
                 times["hop_stream_delta"] = []
+                # two more workers for the 3-node remote tour
+                for wname in ("W2", "W3"):
+                    nbs.add_remote_node(wname, sup.spawn(wname, serve_only=True).address)
+                times["tour_stream"] = []
+                times["tour_store"] = []
             except Exception as e:  # pragma: no cover - spawn-impossible envs
                 print(f"xproc mode unavailable ({e}); skipping")
                 sup = None
@@ -134,7 +157,7 @@ def bench(
                 state = make_state()
                 host = np.asarray(state["x"])
                 t0 = time.perf_counter()
-                ref = dhp.hop(state, "W", via="stream")
+                ref = dhp.hop(state, "W", via="auto")
                 dt_full = time.perf_counter() - t0
                 if ref.via == "stream":
                     times["hop_stream"].append(dt_full)
@@ -150,7 +173,7 @@ def bench(
                 mutated[: max(1, int(n * mutate_frac))] += 1.0
                 state2 = {"x": jnp.asarray(mutated)}
                 t0 = time.perf_counter()
-                ref2 = dhp.hop(state2, "W", via="stream")
+                ref2 = dhp.hop(state2, "W", via="auto")
                 dt_delta = time.perf_counter() - t0
                 if ref2.via == "stream" and ref.via == "stream":
                     times["hop_stream_delta"].append(dt_delta)
@@ -170,6 +193,37 @@ def bench(
                 nbs.call("W", "svc/drop", token=ref2.token)
                 wnode._stream_baseline = None  # next round streams full
                 del state, state2
+
+            if "tour_stream" in times:
+                # the 3-stage remote itinerary, stream-chained vs store-chained
+                # on the SAME input (bit-identical products double as a check)
+                from repro.core.itinerary import Itinerary, Stage
+                from repro.fabric import worker as fabworker
+
+                stages = [
+                    Stage("W", fabworker.tour_read, "read"),
+                    Stage("W2", fabworker.tour_compute, "compute"),
+                    Stage("W3", fabworker.tour_write, "write"),
+                ]
+                base = rng.standard_normal((tour_n, 256))
+                outs = {}
+                for cfg, via in (("tour_stream", "auto"), ("tour_store", "store")):
+                    dhp = DHP(nbs, "A", chunk_bytes=chunk_bytes)
+                    hop_vias.clear()
+                    t0 = time.perf_counter()
+                    outs[cfg] = Itinerary(dhp, via=via).run({"x": base.copy()}, stages)
+                    dt = time.perf_counter() - t0
+                    # "store" = a hop/relay leg fell back; "fetch_store" = the
+                    # streamed return leg did. Either disqualifies the timing.
+                    if via == "auto" and any("store" in v for v in hop_vias):
+                        if strict_stream:
+                            raise RuntimeError(f"tour leg fell back: {hop_vias}")
+                        tour_fallbacks += 1
+                    else:
+                        times[cfg].append(dt)
+                if outs["tour_stream"]["x"].tobytes() != outs["tour_store"]["x"].tobytes():
+                    raise RuntimeError("tour products differ across transports")
+                del outs
     finally:
         if sup is not None:
             sup.shutdown()
@@ -186,10 +240,14 @@ def bench(
         },
         "configs": {},
         "stream_fallbacks": stream_fallbacks,
+        "tour_fallbacks": tour_fallbacks,
+        "tour": {"stages": 3, "nodes": ["W", "W2", "W3"],
+                 "state_bytes": tour_n * 256 * 8},
     }
     t_live = statistics.median(times["hop_live"])
     rows = [("hop_live", t_live * 1e6, f"{nbytes/t_live/1e9:.2f}GB/s")]
-    for key in ("hop_store", "hop_xproc", "hop_stream", "hop_stream_delta"):
+    for key in ("hop_store", "hop_xproc", "hop_stream", "hop_stream_delta",
+                "tour_stream", "tour_store"):
         if key not in times or not times[key]:
             continue
         t = statistics.median(times[key])
@@ -217,6 +275,10 @@ def bench(
             ratios["stream_over_delta"] = (
                 cfg["hop_stream"]["median_s"] / cfg["hop_stream_delta"]["median_s"]
             )
+    if "tour_stream" in cfg and "tour_store" in cfg:
+        ratios["tour_store_over_stream"] = (
+            cfg["tour_store"]["median_s"] / cfg["tour_stream"]["median_s"]
+        )
     results["ratios"] = ratios
     results["stream"] = stream_stats
     return rows, results
@@ -257,11 +319,12 @@ def main(argv: list[str] | None = None) -> None:
     for k, v in results["ratios"].items():
         print(f"{k}: {v:.2f}x")
     if args.smoke:
-        # the smoke contract: both stream configs ran without falling back
-        for need in ("hop_stream", "hop_stream_delta"):
+        # the smoke contract: stream, delta, and the stream-chained remote
+        # tour all ran end to end without ever falling back to the store
+        for need in ("hop_stream", "hop_stream_delta", "tour_stream", "tour_store"):
             if need not in results["configs"]:
                 raise SystemExit(f"smoke: {need} did not run")
-        print("smoke ok: stream + delta transports ran without fallback")
+        print("smoke ok: stream, delta, and tour transports ran without fallback")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1, sort_keys=True)

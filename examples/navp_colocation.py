@@ -8,6 +8,16 @@ Lagrangian view — with `publish("ckpt")` after each stage so a reclaim
 resumes mid-pipeline.
 
     PYTHONPATH=src python examples/navp_colocation.py
+
+The same itinerary runs unchanged across *process-backed* nodes: register
+them with ``nbs.add_remote_node(name, address)`` (see ``repro.fabric``) and
+each stage executes inside the worker holding the state (`svc/run_stage`),
+with node-to-node moves streamed worker-to-worker and the product streamed
+back — no store on the happy path. The one requirement is that stage
+functions live in an importable module (these ones are defined in a script's
+``__main__``, so a remote runner would transparently fall back to fetching
+the state and running them driver-side; move them into a package module to
+ship the computation instead of the data).
 """
 
 import sys

@@ -22,6 +22,13 @@ Two utilities around checkpoint/restart:
     any stream failure; ``publish`` never streams (durability needs the
     disk).
 
+    ``hop`` also accepts a :class:`RemoteStateRef` receipt — the state then
+    moves worker-to-worker (``svc/relay``, streamed, per-hop store
+    fallback) without ever visiting this process; ``fetch(ref)`` brings a
+    resident state home (streamed, store fallback) and ``publish_ref``
+    checkpoints one disk-durably in place. Together these are what let
+    itineraries tour process-backed nodes (``core/itinerary.py``).
+
 ``publish(job_id, status, ...)``  (Fig. 6)
     status == "ckpt":     checkpoint, upload CMI, svc/publish_job("ckpt")
     status == "finished": upload product,         svc/publish_job("finished")
@@ -45,7 +52,7 @@ from repro.checkpoint.serializer import SaveOptions
 from repro.core.cmi import mesh_resharding_resolver, restore_cmi, save_cmi, snapshot_to_host
 from repro.core.delta import DeltaPolicy, DeltaTracker
 from repro.core.jobstore import STATUS_CKPT, STATUS_FINISHED, JobStore
-from repro.core.nbs import NBS
+from repro.core.nbs import NBS, RemoteStateRef
 from repro.utils import logger
 
 
@@ -99,9 +106,17 @@ class DHP:
         ``changed_hint`` (per-array chunk bitmaps from
         ``core/delta.device_changed_hints``) lets a streamed repeat hop skip
         hashing chunks the device already proved unchanged.
+
+        ``state`` may itself be a :class:`RemoteStateRef` receipt from an
+        earlier hop: the resident state is then moved onward — worker to
+        worker (``svc/relay``, streamed, with per-hop store fallback) or
+        back into this process when ``dest`` is in-process.
         """
+        if isinstance(state, RemoteStateRef):
+            return self._hop_remote(state, dest, via=via, step=step)
         src = self.node
         dest_node = self.nbs.node(dest)  # raises if dest was reclaimed
+        requested = via
         if via == "auto":
             if dest_node.mesh is not None:
                 via = "live"
@@ -130,6 +145,10 @@ class DHP:
                 logger.info("hop(stream) %s -> %s", src, dest)
                 return out
             except Exception as e:
+                if requested == "stream":
+                    # forced transport: surface the failure (matching
+                    # fetch/receipt-hop semantics); only "auto" downgrades
+                    raise
                 logger.warning(
                     "hop(stream) %s -> %s failed (%s); falling back to store path",
                     src, dest, e,
@@ -147,16 +166,138 @@ class DHP:
             options=SaveOptions(chunk_bytes=self.chunk_bytes, writers=self.writers),
         )
         del state  # (4) "exit": the source's copy is gone
+        return self._restore_transit(src, dest, name)
+
+    def _restore_transit(self, src: str, dest: str, name: str) -> Any:
+        """Ask ``dest`` to restore transit CMI ``name`` (svc/hop).
+
+        The destination GCs the CMI after a successful restore; on failure
+        it is cleaned up here — either way the hop namespace never leaks.
+        """
         try:
             out = self.nbs.call(dest, "svc/hop", cmi=name, io_threads=self.io_threads)
         except Exception:
-            # the destination normally GCs the transit CMI after restoring;
-            # if the call failed, clean it up here or retries leak the store
             shutil.rmtree(self.nbs.hop_root / name, ignore_errors=True)
             raise
         self.node = dest
         logger.info("hop(store) %s -> %s via %s", src, dest, name)
         return out
+
+    # ------------------------------------------------------------------
+    # receipt-aware hops: the state lives in another process
+    # ------------------------------------------------------------------
+    def _hop_remote(self, ref: RemoteStateRef, dest: str, *, via: str = "auto",
+                    step: int = 0) -> Any:
+        """Move a remote-resident state onward — Fig. 8's chained tour.
+
+        Happy path for a process-backed ``dest``: ``svc/relay`` on the
+        holder, a worker-initiated ``svc/hop_stream`` straight to ``dest``
+        (no driver, no disk in the data path). Any relay failure falls back
+        *per hop* to the store path (``svc/fetch`` on the holder →
+        ``svc/hop`` on ``dest``), so the PR 2/3 durability guarantees are
+        unchanged. An in-process ``dest`` pulls the state back here
+        (streamed fetch, store fallback) and reshard-places it if meshed.
+        """
+        src = ref.node
+        if src == dest:
+            self.node = dest
+            return ref
+        src_node = self.nbs.node(src)
+        dest_node = self.nbs.node(dest)
+        dest_client = getattr(dest_node, "client", None)
+        if dest_client is None:
+            # destination lives in THIS process: the tour comes home
+            self.nbs.plugins.emit("on_hop", src=src, dest=dest, via="fetch", cmi=None)
+            state = self.fetch(ref, via=via)
+            if dest_node.mesh is not None:
+                state = _reshard_tree(state, mesh_resharding_resolver(dest_node.mesh))
+            self.node = dest
+            logger.info("hop(fetch) %s -> %s", src, dest)
+            return state
+        if via in ("auto", "stream") and getattr(dest_node, "supports_hop_stream", False):
+            self.nbs.plugins.emit("on_hop", src=src, dest=dest, via="relay", cmi=None)
+            try:
+                # drop=False: the holder keeps its copy until the receipt is
+                # safely HERE — if the receipt frame is lost after a relay
+                # that actually succeeded, the fallback below still has a
+                # live source to fetch from instead of a stranded dest copy
+                kwargs = dict(token=ref.token, dest=list(dest_client.address),
+                              step=step, chunk_bytes=self.chunk_bytes, drop=False)
+                fail_after = getattr(dest_node, "_stream_fail_after", None)
+                if fail_after is not None:  # fault injection (tests)
+                    kwargs["fail_after_chunks"] = fail_after
+                receipt = src_node.invoke("svc/relay", **kwargs)
+            except Exception as e:
+                if via == "stream":
+                    raise
+                logger.warning(
+                    "hop(relay) %s -> %s failed (%s); per-hop store fallback",
+                    src, dest, e,
+                )
+            else:
+                try:
+                    src_node.invoke("svc/drop", token=ref.token)  # confirmed
+                except Exception as e:
+                    logger.warning("post-relay drop of %s on %s failed: %s",
+                                   ref.token, src, e)
+                self.node = dest
+                logger.info("hop(relay) %s -> %s", src, dest)
+                return RemoteStateRef(
+                    node=receipt.get("node", dest),
+                    token=receipt["token"],
+                    step=int(receipt.get("step", step)),
+                    leaves=int(receipt.get("leaves", 0)),
+                    via="stream",
+                )
+        # per-hop store fallback (or via="store"): the holder re-publishes
+        # the state as a transit CMI, dest restores it (Fig. 3 with the
+        # holding worker as the source). The holder KEEPS its resident copy
+        # until the destination restore is confirmed — if the restore fails
+        # too (dest dead), the state survives on the holder and only the
+        # transit CMI is cleaned up.
+        self.nbs.plugins.emit("on_hop", src=src, dest=dest, via="store", cmi=None)
+        name = f"hop-{uuid.uuid4().hex[:12]}"
+        src_node.invoke("svc/fetch", token=ref.token, name=name, drop=False)
+        out = self._restore_transit(src, dest, name)
+        try:
+            src_node.invoke("svc/drop", token=ref.token)  # (4) "exit", confirmed
+        except Exception as e:
+            logger.warning("post-hop drop of %s on %s failed: %s", ref.token, src, e)
+        return out
+
+    def fetch(self, ref: RemoteStateRef, *, via: str = "auto") -> Any:
+        """Bring a remote-resident state back into THIS process.
+
+        ``via="auto"`` streams it over the fabric socket (bulk frames, no
+        store write — paper §Q5 on the return leg) and falls back to the
+        store-mediated ``svc/fetch`` + restore on any stream failure;
+        ``"stream"``/``"store"`` force one path. The worker drops its
+        resident copy once the state is safely here.
+        """
+        node = self.nbs.node(ref.node)
+        if via in ("auto", "stream") and getattr(node, "supports_fetch_stream", False):
+            try:
+                state, _step = node.fetch_stream(ref.token, chunk_bytes=self.chunk_bytes)
+                self.nbs.plugins.emit("on_hop", src=ref.node, dest=self.node,
+                                      via="fetch_stream", cmi=None)
+                logger.info("fetch(stream) %s from %s", ref.token, ref.node)
+                return state
+            except Exception as e:
+                if via == "stream":
+                    raise
+                logger.warning("fetch(stream) of %s failed (%s); store fallback",
+                               ref.token, e)
+        # observable (plugins) so smoke harnesses can catch a silent
+        # streamed-fetch regression falling back to the disk
+        self.nbs.plugins.emit("on_hop", src=ref.node, dest=self.node,
+                              via="fetch_store", cmi=None)
+        fetched = node.invoke("svc/fetch", token=ref.token)
+        state, _ = restore_cmi(self.nbs.hop_root, fetched["cmi"],
+                               io_threads=self.io_threads)
+        # transit baggage, not a published product: GC once the state is live
+        shutil.rmtree(self.nbs.hop_root / fetched["cmi"], ignore_errors=True)
+        logger.info("fetch(store) %s from %s via %s", ref.token, ref.node, fetched["cmi"])
+        return state
 
     # ------------------------------------------------------------------
     # publish (Fig. 6)
@@ -213,6 +354,35 @@ class DHP:
             self.nbs.plugins.emit("on_publish", job_id=job_id, status=status, name=name)
             return name
         raise ValueError(f"unknown publish status {status!r}")
+
+    def publish_ref(self, job_id: str, ref: RemoteStateRef, *, step: int = 0,
+                    extra: dict | None = None, meta: dict | None = None) -> str:
+        """Publish a checkpoint of a REMOTE-resident state, disk-durably.
+
+        The holding worker saves the CMI straight into the job's cmi_root on
+        the shared store (``svc/publish_resident`` — the resident copy is
+        untouched), then the job record is updated here. Mid-tour publishes
+        therefore keep exactly the durability of local ones; ``extra``
+        carries bookkeeping keys (e.g. ``itinerary_stage``) into the saved
+        copy only.
+        """
+        if self.jobstore is None:
+            raise RuntimeError("publish requires a JobStore")
+        name = f"cmi-{step:010d}-{uuid.uuid4().hex[:8]}"
+        self.nbs.plugins.emit("on_checkpoint", node=ref.node, cmi=name, step=step)
+        self.nbs.call(
+            ref.node, "svc/publish_resident",
+            token=ref.token, store_root=str(self.jobstore.cmi_root(job_id)),
+            name=name, step=step, extra=extra or {}, meta=meta or {},
+            chunk_bytes=self.chunk_bytes, writers=self.writers or 1,
+        )
+        self.jobstore.svc_publish_job(
+            job_id, STATUS_CKPT, cmi=name, step=step,
+            keep_last=self.delta.policy.keep_last,
+        )
+        self.delta.record_published(job_id, name)
+        self.nbs.plugins.emit("on_publish", job_id=job_id, status=STATUS_CKPT, name=name)
+        return name
 
     def _do_publish_ckpt(self, job_id, name, state, step, meta, opts) -> None:
         save_cmi(
@@ -272,24 +442,46 @@ class DHP:
             if item is self._SENTINEL:
                 return
             fn, args = item
+            err: Exception | None = None
             try:
                 fn(*args)
             except Exception as e:  # surfaced at flush()
-                self._errors.append(e)
+                err = e
                 logger.exception("async publish failed")
             finally:
+                # error recording shares the cv lock with flush()'s drain so
+                # a failure can never slip between the wait and the read
                 with self._cv:
+                    if err is not None:
+                        self._errors.append(err)
                     self._pending -= 1
                     if self._pending == 0:
                         self._cv.notify_all()
 
     def flush(self, timeout: float = 300.0) -> None:
-        """Join all in-flight async publishes; re-raise the first failure."""
+        """Join all in-flight async publishes; surface their failures.
+
+        ALL queued errors are drained (under the cv lock): the first is
+        raised, the rest ride along as ``__notes__`` — a later, unrelated
+        ``flush()`` never inherits this batch's failures.
+        """
         with self._cv:
             if not self._cv.wait_for(lambda: self._pending == 0, timeout=timeout):
                 raise TimeoutError("async publish did not drain")
-        if self._errors:
-            raise self._errors.pop(0)
+            errors, self._errors = self._errors, []
+        if errors:
+            first = errors[0]
+            for other in errors[1:]:
+                note = f"async publish also failed: {type(other).__name__}: {other}"
+                if hasattr(first, "add_note"):  # 3.11+
+                    first.add_note(note)
+                else:  # 3.10: same __notes__ shape, minus traceback rendering
+                    notes = getattr(first, "__notes__", None)
+                    if notes is None:
+                        notes = []
+                        first.__notes__ = notes
+                    notes.append(note)
+            raise first
 
     def close(self, timeout: float = 300.0) -> None:
         """Drain pending publishes and retire the worker thread."""

@@ -7,6 +7,24 @@ after stages the application marks worthwhile — Figure 8's
 
     hop(other); read; hop(other); compute; hop(other); write
 
+Stages run **where the state lives**. On an in-process node the stage
+function is simply called; on a process-backed node (``RemoteNode``) the
+hop left only a :class:`RemoteStateRef` receipt behind, so the runner sends
+the stage *to the state* instead: ``svc/run_stage`` executes the function —
+addressed by its module-qualified name, which the worker imports — on the
+resident state inside the worker. Node-to-node moves between remote stages
+are worker-initiated streamed relays (``svc/relay``), and the tour's final
+product streams back over ``svc/fetch_stream`` — on the happy path a remote
+tour never touches the shared store. Every streamed leg falls back per-hop
+to the store-mediated path on failure, and mid-tour publishes
+(``svc/publish_resident``) are always disk-durable, so the preemption
+guarantees are exactly those of local itineraries.
+
+Stage functions that cannot be imported by a worker (lambdas, closures,
+``__main__`` locals) degrade gracefully: the state is fetched back and the
+stage runs in the driver — the tour completes, just without the
+ship-the-computation win for that stage.
+
 A :class:`MobilePipeline` runs several itineraries over a stream of work
 items in software-pipelined order (ref [7]): item *i* executes stage *s* at
 logical tick ``i + s``, so at steady state every node is busy with a
@@ -25,15 +43,20 @@ from repro.core.nbs import RemoteStateRef
 from repro.utils import logger
 
 
-def _require_local(state: Any, dest: str) -> Any:
-    if isinstance(state, RemoteStateRef):
-        raise NotImplementedError(
-            f"stage destination {dest!r} is a process-backed node: the hop "
-            "returned a RemoteStateRef receipt, and itineraries cannot run "
-            "stage functions on remote state yet (see ROADMAP: remote "
-            "itineraries via svc/hop->svc/fetch chaining)"
-        )
-    return state
+def stage_ref(fn: Callable) -> str | None:
+    """Module-qualified reference (``pkg.mod:qualname``) for a stage
+    function, or ``None`` when it is not addressable across processes:
+    lambdas, closures, ``__main__`` locals, bound methods (the worker would
+    resolve the unbound function and misbind the state as ``self``), and
+    partials — nothing a worker can import and call as ``fn(state)``.
+    """
+    if getattr(fn, "__self__", None) is not None:
+        return None
+    mod = getattr(fn, "__module__", None)
+    qual = getattr(fn, "__qualname__", None)
+    if not mod or not qual or "<" in qual or mod == "__main__":
+        return None
+    return f"{mod}:{qual}"
 
 
 @dataclass
@@ -42,57 +65,146 @@ class Stage:
     fn: Callable[[Any], Any]  # state -> state
     name: str = ""
     publish: bool = False  # publish a "ckpt" CMI after this stage (Fig. 7)
+    # explicit cross-process reference for fn ("pkg.mod:func" or a
+    # register_stage'd name); derived from fn's module/qualname when empty
+    fn_ref: str = ""
+
+
+def _exec_stage(dhp: DHP, st: Stage, state: Any, *, step: int = 0,
+                via: str = "auto") -> Any:
+    """Run one stage function where the state lives.
+
+    Remote-resident state (a receipt) dispatches ``svc/run_stage`` to the
+    holding worker; an unaddressable fn localizes the state first.
+    """
+    if isinstance(state, RemoteStateRef):
+        ref = st.fn_ref or stage_ref(st.fn)
+        if ref is None:
+            logger.info(
+                "stage %r is not addressable remotely; localizing state from %s",
+                st.name or st.fn, state.node,
+            )
+            state = dhp.fetch(state, via=via)
+        else:
+            try:
+                r = dhp.nbs.call(state.node, "svc/run_stage",
+                                 token=state.token, fn=ref, step=step)
+            except Exception as e:
+                # the worker could not RESOLVE the reference (module not on
+                # its path): degrade like an unaddressable fn — fetch and run
+                # here. Failures from the stage body itself still surface.
+                if "StageResolutionError" not in str(e):
+                    raise
+                logger.warning(
+                    "stage ref %r unresolvable on %s (%s); localizing",
+                    ref, state.node, e,
+                )
+                state = dhp.fetch(state, via=via)
+                return st.fn(state)
+            return RemoteStateRef(
+                node=r.get("node", state.node),
+                token=r["token"],
+                step=int(r.get("step", step)),
+                leaves=int(r.get("leaves", 0)),
+                via=state.via,
+            )
+    return st.fn(state)
 
 
 class Itinerary:
-    def __init__(self, dhp: DHP, job_id: str | None = None):
+    """Run a list of :class:`Stage` as one migrating computation.
+
+    ``via`` selects the transport preference for every hop/relay/fetch in
+    the tour: ``"auto"`` (default) streams wherever possible with
+    transparent store fallback; ``"store"`` forces the disk-mediated path
+    (the benchmark's control arm).
+    """
+
+    def __init__(self, dhp: DHP, job_id: str | None = None, *, via: str = "auto"):
         self.dhp = dhp
         self.job_id = job_id
+        self.via = via
         self.trace: list[tuple[str, str]] = []  # (stage, node) execution log
 
-    def run(self, state: Any, stages: list[Stage], *, start_stage: int = 0, step0: int = 0) -> Any:
-        """Execute stages sequentially, hopping between nodes."""
+    def run(self, state: Any, stages: list[Stage], *, start_stage: int = 0,
+            step0: int = 0, localize: bool = True) -> Any:
+        """Execute stages sequentially, hopping the state between nodes.
+
+        Publishing stages checkpoint after running (``step0 + i`` numbers
+        the CMIs, so resumed tours keep monotone steps). With ``localize``
+        (default) a tour ending on a process-backed node streams its final
+        product back to the caller.
+        """
         for i in range(start_stage, len(stages)):
             st = stages[i]
-            if self.dhp.node != st.dest:
-                state = _require_local(self.dhp.hop(state, st.dest, step=step0 + i), st.dest)
-            state = st.fn(state)
+            src = state.node if isinstance(state, RemoteStateRef) else self.dhp.node
+            if src != st.dest:
+                state = self.dhp.hop(state, st.dest, step=step0 + i, via=self.via)
+            state = _exec_stage(self.dhp, st, state, step=step0 + i, via=self.via)
             self.trace.append((st.name or f"stage{i}", self.dhp.node))
             if st.publish and self.job_id is not None:
-                # record which stage completed so restart skips finished work
-                if isinstance(state, dict):
-                    pub_state = {**state, "itinerary_stage": i + 1}
-                else:
-                    # non-dict states ride in a marked wrapper that resume()
-                    # unwraps, so the itinerary continues with the original
-                    # state rather than the bookkeeping dict
-                    pub_state = {
-                        "state": state,
-                        "itinerary_stage": i + 1,
-                        "itinerary_wrapped": True,
-                    }
-                self.dhp.publish(self.job_id, STATUS_CKPT, pub_state, step=step0 + i)
+                self._publish_stage(state, i, step0)
+        if localize and isinstance(state, RemoteStateRef):
+            state = self.dhp.fetch(state, via=self.via)
         return state
 
+    def _publish_stage(self, state: Any, i: int, step0: int) -> None:
+        # record which stage completed so restart skips finished work
+        if isinstance(state, RemoteStateRef):
+            # the worker holding the state saves the CMI into the job's
+            # cmi_root on the shared store — disk-durable, resident untouched
+            self.dhp.publish_ref(self.job_id, state, step=step0 + i,
+                                 extra={"itinerary_stage": i + 1})
+            return
+        if isinstance(state, dict):
+            pub_state = {**state, "itinerary_stage": i + 1}
+        else:
+            # non-dict states ride in a marked wrapper that resume()
+            # unwraps, so the itinerary continues with the original
+            # state rather than the bookkeeping dict
+            pub_state = {
+                "state": state,
+                "itinerary_stage": i + 1,
+                "itinerary_wrapped": True,
+            }
+        self.dhp.publish(self.job_id, STATUS_CKPT, pub_state, step=step0 + i)
+
     def resume(self, stages: list[Stage]) -> Any:
-        """Restart an interrupted itinerary from its last published stage."""
-        state, _ = self.dhp.restart(self.job_id)
+        """Restart an interrupted itinerary from its last published stage.
+
+        The restored CMI's step is threaded back through ``run(step0=...)``
+        so post-resume publishes continue the pre-preemption numbering —
+        ``keep_last`` GC orders CMIs by step, so renumbering from 0 could
+        make it retain stale pre-preemption images over fresh ones.
+        """
+        state, step = self.dhp.restart(self.job_id)
         start = 0
         if isinstance(state, dict):
             start = int(state.pop("itinerary_stage", 0))
             if state.pop("itinerary_wrapped", False):
                 state = state["state"]
-        logger.info("itinerary resume at stage %d/%d", start, len(stages))
-        return self.run(state, stages, start_stage=start)
+        # the CMI at stage i carried step0 + i and start == i + 1, so this
+        # reconstructs the original step0; without stage bookkeeping the
+        # restored step itself is the best anchor
+        step0 = step - (start - 1) if start > 0 else step
+        logger.info("itinerary resume at stage %d/%d (step0=%d)", start, len(stages), step0)
+        return self.run(state, stages, start_stage=start, step0=step0)
 
 
 @dataclass
 class MobilePipeline:
-    """Software-pipelined execution of one itinerary over many work items."""
+    """Software-pipelined execution of one itinerary over many work items.
+
+    Remote stages work exactly as in :class:`Itinerary`: work items whose
+    state is resident in a worker are advanced via ``svc/run_stage`` and
+    relayed node-to-node; finished items are streamed back before being
+    returned.
+    """
 
     dhp: DHP
     stages: list[Stage]
     tick_log: list[list[tuple[int, str]]] = field(default_factory=list)
+    via: str = "auto"
 
     def run(self, items: list[Any]) -> list[Any]:
         n, s = len(items), len(self.stages)
@@ -108,11 +220,14 @@ class MobilePipeline:
                     cur = states.pop(item_idx, None)
                     if cur is None:
                         cur = items[item_idx]
-                    if self.dhp.node != st.dest:
-                        cur = _require_local(self.dhp.hop(cur, st.dest, step=tick), st.dest)
-                    cur = st.fn(cur)
+                    src = cur.node if isinstance(cur, RemoteStateRef) else self.dhp.node
+                    if src != st.dest:
+                        cur = self.dhp.hop(cur, st.dest, step=tick, via=self.via)
+                    cur = _exec_stage(self.dhp, st, cur, step=tick, via=self.via)
                     active.append((item_idx, st.name or f"stage{stage_idx}"))
                     if stage_idx == s - 1:
+                        if isinstance(cur, RemoteStateRef):
+                            cur = self.dhp.fetch(cur, via=self.via)
                         done[item_idx] = cur
                     else:
                         states[item_idx] = cur

@@ -43,6 +43,12 @@ class RemoteStateRef:
     it" without importing the fabric. ``via`` records which transport landed
     the state: ``"store"`` (disk-mediated Fig. 3/4) or ``"stream"`` (the
     §Q5 socket pipeline).
+
+    Receipts are chainable: ``dhp.hop(ref, dest)`` relays the resident state
+    worker-to-worker (``svc/relay``), ``dhp.fetch(ref)`` brings it back, and
+    ``nbs.call(ref.node, "svc/run_stage", token=ref.token, fn=...)`` runs a
+    stage function on it in place — which is how itineraries tour
+    process-backed nodes without the state ever visiting the driver.
     """
 
     node: str
@@ -62,9 +68,11 @@ class Node:
     meta: dict[str, Any] = field(default_factory=dict)
 
     # Process-backed subclasses that can receive a state stream over their
-    # socket (``repro.fabric.proxy.RemoteNode``) flip this; ``dhp.hop`` uses
-    # it to prefer the §Q5 streaming transport over store-mediation.
+    # socket (``repro.fabric.proxy.RemoteNode``) flip these; ``dhp.hop`` /
+    # ``dhp.fetch`` use them to prefer the §Q5 streaming transports over
+    # store-mediation (hop_stream: state in; fetch_stream: state back out).
     supports_hop_stream = False
+    supports_fetch_stream = False
 
     def register(self, svc_name: str, handler: Callable) -> None:
         self.services[svc_name] = handler

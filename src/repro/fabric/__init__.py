@@ -1,9 +1,14 @@
 """NavP process fabric — per-node worker processes behind real RPC.
 
 Modules:
-  wire        Length-prefixed JSON/msgpack frames over unix/TCP sockets.
+  wire        Length-prefixed JSON/msgpack frames over unix/TCP sockets,
+              plus the bulk-frame data plane for streaming transports.
   server      NodeServer: serves one node's services (svc/ping, svc/hop,
-              svc/fetch, the three jobstore services) from inside a worker.
+              svc/hop_stream, svc/fetch[_stream], svc/run_stage, svc/relay,
+              svc/publish_resident, the three jobstore services) from
+              inside a worker.
+  stream      The chunk pipeline shared by streamed hops, worker-to-worker
+              relays, and streamed fetches (paper §Q5 on the wire).
   proxy       FabricClient + RemoteNode: ``nbs.call`` across the boundary.
   worker      ``python -m repro.fabric.worker`` — the process entrypoint,
               with the Figure-7 job loop and real SIGTERM notice handling.
@@ -13,8 +18,11 @@ Modules:
 
 The in-process :class:`~repro.core.nbs.Node` stays the default backend;
 this package is opt-in per node via ``NBS.add_remote_node`` or the
-supervisor. Hops between process-backed nodes are store-mediated only —
-the live-reshard fast path needs a shared device mesh and stays in-process.
+supervisor. Hops to (and between) process-backed nodes stream over the
+fabric socket with transparent store-mediated fallback — itineraries tour
+worker processes without the shared store in the happy path (see
+docs/fabric.md "Remote itineraries"); only the live-reshard fast path,
+which needs a shared device mesh, stays in-process.
 """
 
 from repro.fabric.proxy import FabricClient, RemoteNode, RemoteStateRef, wait_ready  # noqa: F401

@@ -32,11 +32,17 @@ class FabricClient:
     land on the respawned instance instead of dying with the old one.
 
     Only idempotent services are re-sent (the connection may have died
-    AFTER the server executed the request): re-leasing, re-restoring a hop
-    CMI, or re-dropping a token converge to the same end state, but
-    ``svc/fetch`` (drop side effect) and ``svc/publish_job`` (status
-    transitions) must surface the transport error instead of executing
-    twice.
+    AFTER the server executed the request): re-leasing, re-dropping a token,
+    or re-restoring a hop CMI (the server dedups on the CMI name and returns
+    the original receipt, since the transit CMI is GC'd after the first
+    restore) converge to the same end state, but ``svc/fetch`` (drop side
+    effect), ``svc/run_stage`` (reruns the stage), ``svc/relay`` (re-streams)
+    and ``svc/publish_job`` (status transitions) must surface the transport
+    error instead of executing twice.
+
+    ``on_reconnect`` (set by :class:`RemoteNode`) fires after every
+    successful re-establishment: the server may be a fresh incarnation, so
+    anything cached against its resident state must be invalidated.
     """
 
     _RETRY_SAFE = frozenset({
@@ -47,6 +53,7 @@ class FabricClient:
     def __init__(self, address, *, reconnect_timeout_s: float = 10.0):
         self.address = tuple(address)
         self.reconnect_timeout_s = reconnect_timeout_s
+        self.on_reconnect = None  # callable | None
         self._sock = wire.connect(self.address)
         self._reader = wire.FrameReader(self._sock)
         self._lock = threading.Lock()
@@ -62,13 +69,22 @@ class FabricClient:
             try:
                 self._sock = wire.connect(self.address)
                 self._reader = wire.FrameReader(self._sock)
-                return
+                break
             except OSError:
                 if time.monotonic() >= deadline:
                     raise
                 time.sleep(0.1)
+        if self.on_reconnect is not None:
+            self.on_reconnect()
 
     def request(self, svc: str, **kwargs) -> Any:
+        # svc/get_job is only idempotent when it names a job (re-leasing the
+        # same job to the same worker converges); the claim-NEXT form would
+        # lease a second job on resend, stranding the first under a dead
+        # heartbeat-less lease
+        retry_safe = svc in self._RETRY_SAFE and not (
+            svc == "svc/get_job" and kwargs.get("job_id") is None
+        )
         with self._lock:
             self._next_id += 1
             rid = self._next_id
@@ -78,7 +94,7 @@ class FabricClient:
                     resp = self._reader.recv_msg()
                     break
                 except (OSError, wire.WireError):
-                    if attempt or svc not in self._RETRY_SAFE:
+                    if attempt or not retry_safe:
                         raise
                     logger.warning(
                         "fabric connection to %s lost during %s; reconnecting",
@@ -135,6 +151,7 @@ class RemoteNode(Node):
     _stream_fail_after: int | None = field(default=None, repr=False)
 
     supports_hop_stream = True
+    supports_fetch_stream = True
 
     @classmethod
     def connect(cls, name: str, address, *, meta: dict | None = None) -> "RemoteNode":
@@ -142,9 +159,18 @@ class RemoteNode(Node):
         info = client.request("svc/ping")
         node = cls(name=name, mesh=None, meta={**(meta or {}), "pid": info.get("pid")},
                    client=client)
+        # a reconnect means a possibly-fresh worker incarnation: any resident
+        # state this proxy knows about (delta baselines) is gone over there
+        client.on_reconnect = node._invalidate_stream_state
         logger.info("connected remote node %s at %s (pid %s)", name, tuple(address),
                     info.get("pid"))
         return node
+
+    def _invalidate_stream_state(self) -> None:
+        if self._stream_baseline is not None or self.last_stream_receipt is not None:
+            logger.info("remote node %s: dropping cached stream baseline", self.name)
+        self._stream_baseline = None
+        self.last_stream_receipt = None
 
     def invoke(self, svc_name: str, /, **kwargs) -> Any:
         if self.client is None:
@@ -177,24 +203,38 @@ class RemoteNode(Node):
         only changed chunks travel (delta against the cached baseline).
         Raises ``repro.fabric.stream.StreamHopError`` on any failure — the
         caller (``dhp.hop``) falls back to the store-mediated path.
+
+        Receipts are OWNING handles: each hop lands a full resident copy in
+        the worker, and nothing is dropped implicitly (several receipts per
+        node is a legitimate state — MobilePipeline keeps one per in-flight
+        item). A loop that repeatedly hops fresh states to one node must
+        retire superseded receipts via ``svc/drop``/``svc/fetch`` or the
+        worker's memory grows by one state per hop.
         """
         from repro.fabric.stream import send_state_stream
 
         if self.client is None:
             raise RuntimeError(f"remote node {self.name!r} is not connected")
         baseline_token, baseline_grid = self._stream_baseline or (None, None)
-        receipt, sent_grid = send_state_stream(
-            self.client.address,
-            state,
-            src=src,
-            step=step,
-            chunk_bytes=chunk_bytes,
-            baseline_token=baseline_token,
-            baseline_grid=baseline_grid,
-            changed_hint=changed_hint,
-            **({"fail_after_chunks": self._stream_fail_after}
-               if self._stream_fail_after is not None else {}),
-        )
+        try:
+            receipt, sent_grid = send_state_stream(
+                self.client.address,
+                state,
+                src=src,
+                step=step,
+                chunk_bytes=chunk_bytes,
+                baseline_token=baseline_token,
+                baseline_grid=baseline_grid,
+                changed_hint=changed_hint,
+                **({"fail_after_chunks": self._stream_fail_after}
+                   if self._stream_fail_after is not None else {}),
+            )
+        except Exception:
+            # the receiver's end state is unknowable after a failed stream
+            # (and the caller's fallback lands state under a NEW token): a
+            # later delta must never negotiate against this stale baseline
+            self._invalidate_stream_state()
+            raise
         self._stream_baseline = (receipt["token"], sent_grid)
         self.last_stream_receipt = receipt
         return RemoteStateRef(
@@ -204,6 +244,22 @@ class RemoteNode(Node):
             leaves=int(receipt.get("leaves", 0)),
             via="stream",
         )
+
+    def fetch_stream(self, token: str, *, drop: bool = True,
+                     chunk_bytes: int = 16 << 20) -> tuple[Any, int]:
+        """Stream a resident state BACK from this node — the return leg of a
+        remote tour (no store in the path). Returns ``(state, step)``.
+
+        Raises ``StreamHopError`` on failure; the resident copy survives on
+        the worker unless the final ack round-trip completed, so the caller
+        (``dhp.fetch``) can fall back to the store-mediated ``svc/fetch``.
+        """
+        from repro.fabric.stream import fetch_state_stream
+
+        if self.client is None:
+            raise RuntimeError(f"remote node {self.name!r} is not connected")
+        return fetch_state_stream(self.client.address, token, drop=drop,
+                                  chunk_bytes=chunk_bytes)
 
     def close(self) -> None:
         if self.client is not None:

@@ -18,6 +18,22 @@ filesystem — the S3 analogue) plus an optional :class:`JobStore`, then serves:
                       cached so a later hop can delta against it
     svc/fetch         re-publish a resident state into the store as a fresh
                       CMI so another node can hop it onward
+    svc/fetch_stream  the reverse of svc/hop_stream: pump a resident state's
+                      chunks back down the requesting connection (the driver
+                      gets the tour's final product without a store write);
+                      the resident copy is dropped only after the client
+                      acks full assembly
+    svc/run_stage     run a stage function (addressed by module-qualified
+                      name, or a name pre-registered via register_stage) on
+                      a resident state — the remote-itinerary compute step;
+                      the result becomes resident under a fresh token
+    svc/relay         worker-initiated hop: stream a resident state straight
+                      to ANOTHER worker's svc/hop_stream (per-destination
+                      baseline grids make repeat relays delta); neither the
+                      driver nor the disk is in the data path
+    svc/publish_resident  save a resident state as a committed CMI at a
+                      caller-named store path (the disk-durable mid-tour
+                      publish) without dropping the resident copy
     svc/drop          discard a resident state
     svc/renew_lease   heartbeat: extend the caller's jobstore lease
     svc/list_jobs     ┐
@@ -33,16 +49,79 @@ fan-in is a handful of peers, not a web tier.
 
 from __future__ import annotations
 
+import importlib
 import os
 import threading
 import traceback
 import uuid
-from typing import Any
+from pathlib import Path
+from typing import Any, Callable
 
 from repro.core.jobstore import JobStore
 from repro.core.nbs import NBS
 from repro.fabric import stream, wire
 from repro.utils import logger
+
+# Stage functions addressable by a short name instead of a module path —
+# a worker entrypoint can pre-register application stages here before
+# serving. Module-qualified references ("pkg.mod:qualname") need no
+# registration: any function importable inside the worker resolves.
+STAGE_REGISTRY: dict[str, Callable] = {}
+
+
+def register_stage(name: str, fn: Callable) -> None:
+    STAGE_REGISTRY[name] = fn
+
+
+class StageResolutionError(ValueError):
+    """A stage reference could not be resolved in this worker.
+
+    Distinct from a stage-body failure: the itinerary runner recognizes this
+    (by name, through the RemoteError text) and degrades to fetching the
+    state and running the stage driver-side instead of failing the tour.
+    """
+
+
+def resolve_stage(spec: str) -> Callable:
+    """Resolve a stage reference: a registered name or ``pkg.mod:qualname``.
+
+    Lambdas/closures are not addressable (their qualnames contain ``<``) —
+    the itinerary runner localizes the state instead of sending those.
+    Raises :class:`StageResolutionError` for anything this worker cannot
+    import or look up.
+    """
+    fn = STAGE_REGISTRY.get(spec)
+    if fn is not None:
+        return fn
+    mod_name, sep, qual = spec.partition(":")
+    if not sep or not mod_name or not qual or "<" in qual:
+        raise StageResolutionError(
+            f"unresolvable stage reference {spec!r} (want 'pkg.mod:func' or a "
+            "register_stage'd name)"
+        )
+    try:
+        obj: Any = importlib.import_module(mod_name)
+        for part in qual.split("."):
+            obj = getattr(obj, part)
+    except (ImportError, AttributeError) as e:
+        raise StageResolutionError(f"cannot resolve stage {spec!r}: {e}") from e
+    if not callable(obj):
+        raise StageResolutionError(f"stage reference {spec!r} is not callable")
+    return obj
+
+
+def _derive_step(state: Any, default: int = 0) -> int:
+    """Display-step convention shared by svc/hop and svc/hop_stream: when the
+    transport carries no step, read it from a conventional "step"/"t" leaf."""
+    if default == 0 and isinstance(state, dict):
+        for key in ("step", "t"):
+            if key in state:
+                try:
+                    return int(state[key])
+                except (TypeError, ValueError):
+                    pass
+                break
+    return default
 
 
 class NodeServer:
@@ -61,6 +140,13 @@ class NodeServer:
         # token -> (path, bslice) -> hash, for states that arrived by stream;
         # lets a later svc/hop_stream delta against the resident baseline
         self.stream_grids: dict[str, dict[tuple, str]] = {}
+        # cmi name -> receipt: makes svc/hop idempotent. The transit CMI is
+        # GC'd after restore, so a client that lost its connection AFTER we
+        # executed must get the original receipt back, not a missing-CMI error.
+        self._hop_receipts: dict[str, dict] = {}
+        # relay dest address -> (resident token on dest, sent chunk grid):
+        # the delta baseline for the next svc/relay to that destination
+        self._relay_baselines: dict[tuple, tuple[str, dict]] = {}
         self._listener, self.address = wire.listen(address)
         self._stop = threading.Event()
         self._accept_thread: threading.Thread | None = None
@@ -111,13 +197,18 @@ class NodeServer:
             while not self._stop.is_set():
                 try:
                     req = reader.recv_msg()
-                except wire.WireError:
-                    return  # peer hung up
+                except (OSError, wire.WireError):
+                    return  # peer hung up (clean close or connection reset)
                 if stream.is_stream_request(req):
                     # the connection switches to bulk mode for one session;
                     # on any error the session (and connection) dies without
                     # anything becoming resident
                     if not self._serve_hop_stream(conn, reader, req):
+                        return
+                    continue
+                if stream.is_fetch_request(req):
+                    # bulk mode in the OTHER direction: we pump, the peer acks
+                    if not self._serve_fetch_stream(conn, reader, req):
                         return
                     continue
                 resp = self._dispatch(req)
@@ -164,6 +255,12 @@ class NodeServer:
             return self._svc_hop(**kwargs)
         if svc == "svc/fetch":
             return self._svc_fetch(**kwargs)
+        if svc == "svc/run_stage":
+            return self._svc_run_stage(**kwargs)
+        if svc == "svc/relay":
+            return self._svc_relay(**kwargs)
+        if svc == "svc/publish_resident":
+            return self._svc_publish_resident(**kwargs)
         if svc == "svc/drop":
             self.stream_grids.pop(kwargs["token"], None)
             return {"dropped": self.resident.pop(kwargs["token"], None) is not None}
@@ -181,25 +278,153 @@ class NodeServer:
                  gc: bool = True) -> dict:
         import jax
 
+        # Idempotency: we GC the transit CMI after restore, so a client whose
+        # connection died AFTER we executed re-sends a request whose CMI no
+        # longer exists. Dedup on the CMI name (transit names are uuid-fresh
+        # per hop) and hand back the original receipt instead of failing.
+        cached = self._hop_receipts.get(cmi)
+        if cached is not None and cached["token"] in self.resident:
+            logger.info("svc/hop: dedup retry of %s -> %s", cmi, cached["token"])
+            return cached
+
         state = self.nbs.call(
             self.node_name, "svc/hop",
             cmi=cmi, store_root=store_root, io_threads=io_threads, gc=gc,
         )
-        token = f"res-{uuid.uuid4().hex[:12]}"
+        token = stream.fresh_token()
         leaves = jax.tree_util.tree_leaves(state)
         # step travels in the CMI manifest; svc/hop returns only state, so
         # re-derive a display step from a conventional "step"/"t" leaf if any
-        step = 0
-        if isinstance(state, dict):
-            for key in ("step", "t"):
-                if key in state:
-                    try:
-                        step = int(state[key])
-                    except (TypeError, ValueError):
-                        pass
-                    break
+        step = _derive_step(state)
         self.resident[token] = (state, step)
-        return {"token": token, "step": step, "leaves": len(leaves), "node": self.node_name}
+        receipt = {"token": token, "step": step, "leaves": len(leaves), "node": self.node_name}
+        self._hop_receipts[cmi] = receipt
+        if len(self._hop_receipts) > 256:  # bound the dedup memory
+            self._hop_receipts = {
+                k: v for k, v in self._hop_receipts.items() if v["token"] in self.resident
+            }
+        return receipt
+
+    # -- remote itineraries: run the stage WHERE THE STATE LIVES -------------
+    def _svc_run_stage(self, token: str, fn: str, step: int | None = None) -> dict:
+        """Run a stage function on a resident state (Fig. 8's read/compute/
+        write, executed inside the worker). The result becomes resident under
+        a FRESH token — the old token (and its now-stale stream grid) dies,
+        so a later delta can never negotiate against mutated state."""
+        import jax
+
+        func = resolve_stage(fn)
+        if token not in self.resident:
+            raise KeyError(f"no resident state {token!r}")
+        state, res_step = self.resident.pop(token)
+        self.stream_grids.pop(token, None)
+        try:
+            new_state = func(state)
+        except Exception:
+            # the stage failed before producing a result: keep the input
+            # resident (best effort) so the caller can still fetch/fall back
+            self.resident[token] = (state, res_step)
+            raise
+        new_step = res_step if step is None else int(step)
+        new_token = stream.fresh_token()
+        self.resident[new_token] = (new_state, new_step)
+        logger.info("svc/run_stage: %s on %s -> %s", fn, token, new_token)
+        return {
+            "token": new_token,
+            "step": new_step,
+            "leaves": len(jax.tree_util.tree_leaves(new_state)),
+            "node": self.node_name,
+            "fn": fn,
+        }
+
+    def _svc_relay(
+        self,
+        token: str,
+        dest,
+        step: int | None = None,
+        chunk_bytes: int = 16 << 20,
+        fail_after_chunks: int | None = None,
+        drop: bool = True,
+    ) -> dict:
+        """Worker-initiated hop: stream a resident state straight to the
+        worker at ``dest`` (its svc/hop_stream), bypassing driver and disk.
+
+        Repeat relays to the same destination delta against the grid kept
+        from the last successful send. On success the state has moved, so the
+        local copy is dropped (hop semantics); on ANY failure the baseline
+        for that destination is invalidated, the state stays resident, and
+        the error surfaces so the driver can fall back to the store path.
+        """
+        if token not in self.resident:
+            raise KeyError(f"no resident state {token!r}")
+        state, res_step = self.resident[token]
+        dest_addr = tuple(dest)
+        baseline_token, baseline_grid = self._relay_baselines.get(dest_addr, (None, None))
+        try:
+            receipt, sent_grid = stream.send_state_stream(
+                dest_addr,
+                state,
+                src=self.node_name,
+                step=res_step if step is None else int(step),
+                chunk_bytes=int(chunk_bytes),
+                baseline_token=baseline_token,
+                baseline_grid=baseline_grid,
+                **({"fail_after_chunks": int(fail_after_chunks)}
+                   if fail_after_chunks is not None else {}),
+            )
+        except Exception:
+            # the receiver's end state is unknowable: never delta against it
+            self._relay_baselines.pop(dest_addr, None)
+            raise
+        self._relay_baselines[dest_addr] = (receipt["token"], sent_grid)
+        if drop:
+            self.resident.pop(token, None)
+            self.stream_grids.pop(token, None)
+        logger.info(
+            "svc/relay: %s -> %s as %s (%d chunks)",
+            token, dest_addr, receipt.get("token"), receipt.get("chunks", -1),
+        )
+        return receipt
+
+    def _svc_publish_resident(
+        self,
+        token: str,
+        store_root: str,
+        name: str,
+        step: int | None = None,
+        extra: dict | None = None,
+        meta: dict | None = None,
+        chunk_bytes: int = 16 << 20,
+        writers: int = 1,
+    ) -> dict:
+        """Save a resident state as a committed CMI at ``store_root`` (the
+        caller's jobstore cmi_root on the shared filesystem) WITHOUT dropping
+        the resident copy — the disk-durable mid-tour publish. ``extra``
+        bookkeeping keys ride only in the saved copy; non-dict states are
+        wrapped exactly like Itinerary.run's local publish path so resume()
+        can unwrap either."""
+        from repro.checkpoint.serializer import SaveOptions
+        from repro.core.cmi import save_cmi
+
+        if token not in self.resident:
+            raise KeyError(f"no resident state {token!r}")
+        state, res_step = self.resident[token]
+        step = res_step if step is None else int(step)
+        if extra:
+            if isinstance(state, dict):
+                saved = {**state, **extra}
+            else:
+                saved = {"state": state, **extra, "itinerary_wrapped": True}
+        else:
+            saved = state
+        save_cmi(
+            Path(store_root), name, saved, step=step,
+            meta={"node": self.node_name, "resident": token, **(meta or {})},
+            options=SaveOptions(chunk_bytes=int(chunk_bytes), writers=int(writers) or 1),
+        )
+        logger.info("svc/publish_resident: %s -> %s/%s (step %d)",
+                    token, store_root, name, step)
+        return {"cmi": name, "step": step}
 
     # -- hop_stream: the state arrives on the socket, not the disk ----------
     def _serve_hop_stream(self, conn, reader: wire.FrameReader, req: Any) -> bool:
@@ -241,16 +466,9 @@ class NodeServer:
         import jax
 
         token = stream.fresh_token()
-        if step == 0 and isinstance(state, dict):
-            # same convention as svc/hop: derive a display step from the
-            # state when the sender did not pass one
-            for key in ("step", "t"):
-                if key in state:
-                    try:
-                        step = int(state[key])
-                    except (TypeError, ValueError):
-                        pass
-                    break
+        # same convention as svc/hop: derive a display step from the state
+        # when the sender did not pass one
+        step = _derive_step(state, step)
         self.resident[token] = (state, step)
         self.stream_grids[token] = grid
         self.nbs.plugins.emit("on_restart", node=self.node_name, cmi=None, step=step)
@@ -272,6 +490,61 @@ class NodeServer:
             "svc/hop_stream: %d chunks from %s resident as %s (step %d)",
             counters["chunks"], kwargs.get("src"), token, step,
         )
+        return True
+
+    # -- fetch_stream: the state goes BACK down the socket -------------------
+    def _serve_fetch_stream(self, conn, reader: wire.FrameReader, req: Any) -> bool:
+        """One reverse-streaming session. Returns True iff the connection
+        stays usable. The resident copy is dropped only after the client's
+        ack — a torn fetch leaves it recoverable via store-mediated fetch."""
+        rid = req.get("id")
+        kwargs = dict(req.get("kwargs") or {})
+        token = kwargs.get("token")
+        entry = self.resident.get(token)
+        if entry is None:
+            # plain error reply; no bulk frames were sent, framing is clean
+            try:
+                wire.send_msg(conn, {
+                    "id": rid, "ok": False,
+                    "error": f"KeyError: no resident state {token!r}",
+                    "traceback": "",
+                })
+            except OSError:
+                return False
+            return True
+        state, step = entry
+        try:
+            from repro.checkpoint.serializer import state_stream_meta
+
+            wire.send_msg(conn, {
+                "id": rid, "ok": True,
+                "result": {"accept": True, "meta": state_stream_meta(state),
+                           "step": step},
+            })
+            _, n_chunks, _, _ = stream.pump_state_chunks(
+                conn, state, chunk_bytes=int(kwargs.get("chunk_bytes", 16 << 20)),
+            )
+            ack = reader.recv_msg()
+            if not (isinstance(ack, dict) and ack.get("ack")):
+                raise wire.WireError(f"expected fetch ack, got {ack!r}")
+        except Exception as e:
+            # client never acked: keep the state resident; the connection's
+            # framing state is ambiguous, so drop the connection
+            logger.warning("fetch_stream of %s failed mid-send: %s", token, e)
+            return False
+        if kwargs.get("drop", True):
+            self.resident.pop(token, None)
+            self.stream_grids.pop(token, None)
+        try:
+            wire.send_msg(conn, {
+                "id": rid, "ok": True,
+                "result": {"dropped": bool(kwargs.get("drop", True)),
+                           "chunks": n_chunks},
+            })
+        except OSError:
+            return False
+        logger.info("svc/fetch_stream: %s left as %d chunks (step %d)",
+                    token, n_chunks, step)
         return True
 
     def _svc_fetch(self, token: str, name: str | None = None, drop: bool = True) -> dict:

@@ -34,6 +34,18 @@ death, baseline divergence) raises on the sender, and ``dhp.hop`` falls
 back transparently to the store-mediated path. The receiver discards
 partial state on error — a half-streamed hop can never become resident.
 ``publish`` never uses this path: durability stays with the disk protocol.
+
+Two more sessions ride the same chunk engine (remote itineraries):
+
+* ``svc/relay`` — a *worker-initiated* hop: the NodeServer holding a
+  resident state acts as the sender above, streaming straight to another
+  worker's ``svc/hop_stream``. The driver sees only the receipt; neither
+  the driver nor the disk is in the data path.
+* ``svc/fetch_stream`` — the reverse direction: the server pumps a resident
+  state's chunks back down the requesting connection
+  (:func:`fetch_state_stream` is the client half). The server drops its
+  resident copy only after the client acks full assembly, so a torn fetch
+  leaves the state fetchable via the store path.
 """
 
 from __future__ import annotations
@@ -54,6 +66,7 @@ from repro.fabric import wire
 from repro.utils import logger
 
 HOP_STREAM_SVC = "svc/hop_stream"
+FETCH_STREAM_SVC = "svc/fetch_stream"
 
 # Test hook: seconds to sleep between chunk sends (fault-injection windows).
 _CHUNK_PAUSE_ENV = "REPRO_STREAM_CHUNK_PAUSE_S"
@@ -66,6 +79,49 @@ class StreamHopError(ConnectionError):
 # ---------------------------------------------------------------------------
 # sender
 # ---------------------------------------------------------------------------
+
+
+def pump_state_chunks(
+    sock,
+    state: Any,
+    *,
+    chunk_bytes: int = 16 << 20,
+    baseline: Mapping[tuple, str] | None = None,
+    changed_hint: Mapping[str, Any] | None = None,
+    hash_threads: int = 0,
+    pause_s: float = 0.0,
+) -> tuple[dict, int, int, int]:
+    """Send every chunk of ``state`` as bulk frames followed by eos.
+
+    The shared sending half of hop streams, relays, and streamed fetches.
+    Returns ``(sent_grid, n_chunks, n_data, sent_bytes)``.
+    """
+    sent_grid: dict[tuple, str] = {}
+    n_chunks = n_data = sent_bytes = 0
+    for ch in iter_state_chunks(
+        state,
+        chunk_bytes=chunk_bytes,
+        baseline=baseline,
+        changed_hint=changed_hint,
+        hash_threads=hash_threads,
+    ):
+        header = {
+            "path": ch.path,
+            "slice": ch.slice,
+            "hash": ch.hash,
+            "crc32": ch.crc32,
+            "ref": ch.ref,
+        }
+        wire.send_bulk(sock, header, ch.data if not ch.ref else b"")
+        sent_grid[(ch.path, bslice_key(ch.slice))] = ch.hash
+        n_chunks += 1
+        if not ch.ref:
+            n_data += 1
+            sent_bytes += ch.nbytes
+        if pause_s:
+            time.sleep(pause_s)
+    wire.send_bulk(sock, {"eos": True, "chunks": n_chunks})
+    return sent_grid, n_chunks, n_data, sent_bytes
 
 
 def send_state_stream(
@@ -118,31 +174,15 @@ def send_state_stream(
         use_baseline = baseline_grid if (baseline_ok and baseline_grid) else None
         if baseline_token is not None and not baseline_ok:
             logger.info("hop_stream: receiver dropped baseline %s; full stream", baseline_token)
-        n_chunks = n_data = 0
-        sent_bytes = 0
-        for ch in iter_state_chunks(
+        sent_grid, n_chunks, n_data, sent_bytes = pump_state_chunks(
+            sock,
             state,
             chunk_bytes=chunk_bytes,
             baseline=use_baseline,
             changed_hint=changed_hint if use_baseline else None,
             hash_threads=hash_threads,
-        ):
-            header = {
-                "path": ch.path,
-                "slice": ch.slice,
-                "hash": ch.hash,
-                "crc32": ch.crc32,
-                "ref": ch.ref,
-            }
-            wire.send_bulk(sock, header, ch.data if not ch.ref else b"")
-            sent_grid[(ch.path, bslice_key(ch.slice))] = ch.hash
-            n_chunks += 1
-            if not ch.ref:
-                n_data += 1
-                sent_bytes += ch.nbytes
-            if pause_s:
-                time.sleep(pause_s)
-        wire.send_bulk(sock, {"eos": True, "chunks": n_chunks})
+            pause_s=pause_s,
+        )
         final = reader.recv_msg()
         if not (isinstance(final, dict) and final.get("ok")):
             raise StreamHopError(f"stream failed on receiver: {final!r}")
@@ -235,8 +275,77 @@ def receive_state_stream(
     return state, step, asm.grid, {"chunks": n}
 
 
+# ---------------------------------------------------------------------------
+# streamed fetch (client side; the server half lives in NodeServer)
+# ---------------------------------------------------------------------------
+
+
+def fetch_state_stream(
+    address,
+    token: str,
+    *,
+    drop: bool = True,
+    chunk_bytes: int = 16 << 20,
+    timeout_s: float = 300.0,
+) -> tuple[Any, int]:
+    """Fetch a resident state back over the fabric socket — no store.
+
+    Opens a dedicated connection, asks the server to pump the state's chunks
+    as bulk frames, assembles them, then acks; with ``drop`` the server
+    discards its resident copy only after that ack, so a torn fetch leaves
+    the state recoverable via the store-mediated ``svc/fetch``.
+
+    Returns ``(state, step)``. Raises :class:`StreamHopError` on any
+    transport/validation failure.
+    """
+    try:
+        sock = wire.connect(address)
+    except OSError as e:
+        raise StreamHopError(f"cannot reach {tuple(address)}: {e}") from e
+    try:
+        sock.settimeout(timeout_s)
+        reader = wire.FrameReader(sock)
+        wire.send_msg(sock, {
+            "id": 1, "svc": FETCH_STREAM_SVC,
+            "kwargs": {"token": token, "drop": bool(drop),
+                       "chunk_bytes": int(chunk_bytes)},
+        })
+        accept = reader.recv_msg()
+        if not (isinstance(accept, dict) and accept.get("ok")):
+            raise StreamHopError(f"fetch stream rejected: {accept!r}")
+        res = accept.get("result") or {}
+        state, step, _grid, counters = receive_state_stream(
+            reader, {"meta": res["meta"], "step": res.get("step", 0)},
+        )
+        # Only now may the server drop its copy: the state is fully here.
+        wire.send_msg(sock, {"id": 1, "ack": True})
+        try:
+            final = reader.recv_msg()
+            if not (isinstance(final, dict) and final.get("ok")):
+                logger.warning("fetch stream final status: %r", final)
+        except (OSError, wire.WireError):
+            pass  # state already assembled; drop confirmation is best-effort
+        logger.info(
+            "fetch_stream %s from %s: %d chunks", token, tuple(address), counters["chunks"],
+        )
+        return state, step
+    except StreamHopError:
+        raise
+    except (OSError, wire.WireError, StreamStateError, KeyError) as e:
+        raise StreamHopError(f"fetch stream from {tuple(address)} failed: {e}") from e
+    finally:
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+
 def is_stream_request(req: Any) -> bool:
     return isinstance(req, dict) and req.get("svc") == HOP_STREAM_SVC
+
+
+def is_fetch_request(req: Any) -> bool:
+    return isinstance(req, dict) and req.get("svc") == FETCH_STREAM_SVC
 
 
 def fresh_token() -> str:

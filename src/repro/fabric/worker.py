@@ -67,6 +67,31 @@ def job_step(state: dict[str, Any]) -> dict[str, Any]:
     return {"w": w, "t": t + 1}
 
 
+# ---------------------------------------------------------------------------
+# demo tour stages (Fig. 8: read -> compute -> write)
+#
+# Module-level so any worker can run them by reference via svc/run_stage
+# ("repro.fabric.worker:tour_read" etc.); numpy float64 and strictly
+# deterministic, so an interrupted-and-resumed tour must produce a
+# bit-identical product — the acceptance test of remote itineraries.
+# ---------------------------------------------------------------------------
+
+
+def tour_read(state: dict[str, Any]) -> dict[str, Any]:
+    x = np.asarray(state["x"], dtype=np.float64)
+    return {**state, "x": x * 1.000001 + 0.5}
+
+
+def tour_compute(state: dict[str, Any]) -> dict[str, Any]:
+    x = np.asarray(state["x"], dtype=np.float64)
+    return {**state, "x": np.sin(x) * 2.0 + x * 0.5}
+
+
+def tour_write(state: dict[str, Any]) -> dict[str, Any]:
+    x = np.asarray(state["x"], dtype=np.float64)
+    return {**state, "x": x - 0.25, "toured": int(state.get("toured", 0)) + 1}
+
+
 def start_lease_heartbeat(
     jobstore: JobStore, job_id: str, worker: str, lease_s: float
 ) -> threading.Event:

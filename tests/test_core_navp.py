@@ -213,6 +213,90 @@ def test_async_publish_machinery_stress(cluster):
     dhp.close()
 
 
+def test_stage_ref_addressability():
+    """Only plain importable module-level functions get a remote reference;
+    lambdas, locals, bound methods, and partials must localize instead (a
+    worker resolving a bound method would misbind the state as self)."""
+    import functools
+
+    from repro.core.itinerary import stage_ref
+    from repro.fabric import worker as fw
+
+    assert stage_ref(fw.tour_read) == "repro.fabric.worker:tour_read"
+    assert stage_ref(lambda s: s) is None
+
+    def local_fn(s):
+        return s
+
+    assert stage_ref(local_fn) is None  # qualname contains <locals>
+
+    class Proc:
+        def transform(self, s):
+            return s
+
+    assert stage_ref(Proc().transform) is None  # bound method
+    assert stage_ref(functools.partial(fw.tour_read)) is None  # no qualname
+
+
+def test_flush_surfaces_all_async_errors(cluster):
+    """Regression: flush() popped only the FIRST queued error — the rest
+    leaked into later, unrelated flush() calls (and the list was mutated
+    without the cv lock). All errors drain at once: first raised, others as
+    __notes__."""
+    nbs, store = cluster
+    dhp = DHP(nbs, "A", store, async_publish=True)
+
+    def boom(msg):
+        raise RuntimeError(msg)
+
+    dhp._submit(boom, "first failure")
+    dhp._submit(boom, "second failure")
+    with pytest.raises(RuntimeError, match="first failure") as ei:
+        dhp.flush(timeout=30)
+    notes = getattr(ei.value, "__notes__", [])
+    assert any("second failure" in n for n in notes)
+    # fully drained: an unrelated later flush must not inherit this batch
+    dhp.flush(timeout=30)
+    dhp.close()
+
+
+def test_itinerary_resume_threads_restored_step(cluster):
+    """Regression: resume() discarded the restored step and reran with
+    step0=0, renumbering post-resume publishes below pre-preemption ones —
+    keep_last GC (ordered by step-prefixed CMI names) could then retain the
+    stale images and drop the fresh ones."""
+    nbs, store = cluster
+    dhp = DHP(nbs, "A", store)
+    job = store.create_job({})
+    fail_once = {"armed": True}
+
+    def compute(s):
+        if fail_once["armed"]:
+            fail_once["armed"] = False
+            raise RuntimeError("preempted mid-tour")
+        return {**s, "x": s["x"] * 2}
+
+    stages = [
+        Stage("B", lambda s: {**s, "x": s["x"] + 1}, "read", publish=True),
+        Stage("A", compute, "compute", publish=True),
+        Stage("B", lambda s: {**s, "x": s["x"] - 3}, "write", publish=True),
+    ]
+    it = Itinerary(dhp, job.job_id)
+    with pytest.raises(RuntimeError, match="preempted"):
+        it.run({"x": jnp.asarray(10.0)}, stages, step0=100)
+    assert store.read_job(job.job_id).step == 100  # stage 0 published at step0+0
+
+    it2 = Itinerary(DHP(nbs, "A", store), job.job_id)
+    out = it2.resume(stages)
+    assert float(out["x"]) == 19.0
+    assert [n for n, _ in it2.trace] == ["compute", "write"]
+    # post-resume publishes continue the original numbering: 101, 102
+    assert store.read_job(job.job_id).step == 102
+    steps = [int(name.split("-")[1]) for name in store.list_cmis(job.job_id)]
+    assert steps == sorted(steps) and max(steps) == 102
+    assert all(s >= 100 for s in steps)  # nothing renumbered below the boundary
+
+
 def test_mobile_pipeline_schedule(cluster):
     nbs, store = cluster
     dhp = DHP(nbs, "A", store)

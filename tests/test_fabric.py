@@ -125,19 +125,76 @@ def test_remote_node_rpc_ping_hop_fetch(fab, tmp_path):
     assert sup.reclaim("B", notice=True) == EXIT_PREEMPTED
 
 
-def test_itinerary_rejects_remote_stage(fab, tmp_path):
-    """Itineraries run stage fns on local state; a stage landing on a
-    process-backed node must fail loudly, not feed the receipt to fn."""
-    from repro.core.itinerary import Itinerary, Stage
+def test_hop_retry_after_connection_kill_dedups(tmp_path):
+    """svc/hop is in _RETRY_SAFE, but the server GCs the transit CMI after
+    restoring it: a reconnect-resend after the server already executed must
+    converge on the ORIGINAL receipt (server-side dedup keyed on the CMI
+    name), not fail on the missing CMI."""
+    from repro.core.cmi import save_cmi
+    from repro.fabric.proxy import FabricClient
+    from repro.fabric.server import NodeServer
 
-    sup, _ = fab
-    handle = sup.spawn("B", serve_only=True)
     nbs = NBS(tmp_path / "s3")
-    nbs.add_node("A", mesh=None)
-    nbs.add_remote_node("B", handle.address)
-    it = Itinerary(DHP(nbs, "A"))
-    with pytest.raises(NotImplementedError, match="process-backed"):
-        it.run({"x": np.ones(4)}, [Stage("B", lambda s: s, "read")])
+    nbs.add_node("B", mesh=None)
+    save_cmi(nbs.hop_root, "hop-dup", {"x": np.arange(32, dtype=np.float64)}, step=3)
+    server = NodeServer(nbs, "B", ("tcp", "127.0.0.1", 0)).start()
+    try:
+        c = FabricClient(server.address, reconnect_timeout_s=5.0)
+        # send the request, let the server execute it, then kill the
+        # connection BEFORE reading the response — exactly the window where
+        # the transit CMI is already gone
+        wire.send_msg(c._sock, {"id": 1, "svc": "svc/hop", "kwargs": {"cmi": "hop-dup"}})
+        deadline = time.monotonic() + 10
+        while not server.resident:
+            assert time.monotonic() < deadline, "server never executed svc/hop"
+            time.sleep(0.01)
+        assert not (nbs.hop_root / "hop-dup").exists()  # transit CMI GC'd
+        c._sock.close()  # the response is lost with the connection
+        receipt = c.request("svc/hop", cmi="hop-dup")  # reconnect-resend
+        assert receipt["token"] in server.resident
+        assert len(server.resident) == 1  # executed once, not twice
+        c.close()
+    finally:
+        server.stop()
+
+
+def test_claim_next_get_job_is_not_resent(fab, tmp_path):
+    """svc/get_job without a job_id is claim-NEXT: a reconnect-resend after
+    the server already leased a job would lease a SECOND one and strand the
+    first. The client must surface the transport error instead."""
+    from repro.fabric.proxy import FabricClient
+    from repro.fabric.server import NodeServer
+
+    sup, js = fab
+    j1 = js.create_job({"seed": 1})
+    js.create_job({"seed": 2})
+    nbs = NBS(tmp_path / "s3")
+    nbs.add_node("B", mesh=None)
+    server = NodeServer(nbs, "B", ("tcp", "127.0.0.1", 0), jobstore=js).start()
+    try:
+        c = FabricClient(server.address, reconnect_timeout_s=5.0)
+        # named-job form stays retry-safe: re-leasing converges
+        wire.send_msg(c._sock, {"id": 1, "svc": "svc/get_job",
+                                "kwargs": {"job_id": j1.job_id, "worker": "w0"}})
+        deadline = time.monotonic() + 10
+        while js.read_job(j1.job_id).lease_owner != "w0":
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        c._sock.close()
+        got = c.request("svc/get_job", job_id=j1.job_id, worker="w0")
+        assert got["job_id"] == j1.job_id and got["lease_owner"] == "w0"
+
+        # claim-next form: the lost-response resend must raise, not lease
+        # another job on top of the one this worker (unknowingly) holds
+        c._sock.close()
+        with pytest.raises((OSError, wire.WireError)):
+            c.request("svc/get_job", worker="w0")
+        leased = [jid for jid, _ in js.svc_list_jobs()
+                  if js.read_job(jid).lease_owner == "w0"]
+        assert leased == [j1.job_id]  # no second job was claimed
+        c.close()
+    finally:
+        server.stop()
 
 
 def test_remote_jobstore_services(fab):
@@ -368,3 +425,243 @@ def test_stream_midkill_falls_back_to_respawned_worker(fab, tmp_path):
     assert isinstance(ref, RemoteStateRef) and ref.via == "store"
     back = _fetch_state(nbs, ref.token)
     assert back["x"].tobytes() == src["x"].tobytes() and back["step"] == 8
+
+
+def test_stream_baseline_invalidated_on_fallback(fab, tmp_path):
+    """Regression: after a stream hop failed and fell back to the store
+    path, RemoteNode kept its delta baseline + receipt — the next hop could
+    negotiate against state the receiver no longer holds (and benches would
+    read a stale receipt). Both must be dropped on failure; the next stream
+    hop goes out full."""
+    sup, _ = fab
+    handle = sup.spawn("W", serve_only=True)
+    nbs = NBS(tmp_path / "s3")
+    nbs.add_node("A", mesh=None)
+    wnode = nbs.add_remote_node("W", handle.address)
+    dhp = DHP(nbs, "A", chunk_bytes=1 << 14)
+
+    src = {"x": np.random.default_rng(6).standard_normal((500, 64))}
+    dhp.hop(dict(src), "W")  # stream #1: baseline cached
+    assert wnode._stream_baseline is not None
+
+    wnode._stream_fail_after = 2  # receiver aborts: stream -> store fallback
+    ref2 = dhp.hop(dict(src), "W")
+    assert ref2.via == "store"
+    assert wnode._stream_baseline is None and wnode.last_stream_receipt is None
+
+    wnode._stream_fail_after = None
+    src3 = {"x": src["x"].copy()}
+    src3["x"][:10] += 1.0
+    ref3 = dhp.hop(dict(src3), "W")  # must stream FULL, no stale delta
+    assert ref3.via == "stream"
+    assert wnode.last_stream_receipt["ref_chunks"] == 0
+    back = _fetch_state(nbs, ref3.token)
+    assert back["x"].tobytes() == src3["x"].tobytes()
+
+
+def test_stream_baseline_invalidated_on_respawn_reconnect(fab, tmp_path):
+    """Regression: a client reconnect to a worker respawned at the same
+    address kept the old delta baseline, pointing at resident state the new
+    incarnation never had. _reconnect must invalidate it."""
+    sup, _ = fab
+    sock_path = os.path.join(sup.socket_dir, "W-re.sock")
+    handle = sup.spawn("W", serve_only=True, socket_path=sock_path)
+    nbs = NBS(tmp_path / "s3")
+    nbs.add_node("A", mesh=None)
+    wnode = nbs.add_remote_node("W", handle.address)
+    dhp = DHP(nbs, "A", chunk_bytes=1 << 14)
+
+    src = {"x": np.random.default_rng(7).standard_normal((500, 64))}
+    dhp.hop(dict(src), "W")
+    assert wnode._stream_baseline is not None
+
+    sup.reclaim("W", notice=False)  # SIGKILL: resident cache dies with it
+    sup.spawn("W", serve_only=True, socket_path=sock_path)
+    # first control request reconnects transparently — and must invalidate
+    assert nbs.call("W", "svc/ping")["resident"] == 0
+    assert wnode._stream_baseline is None and wnode.last_stream_receipt is None
+
+    ref = dhp.hop(dict(src), "W")  # fresh full stream against the new worker
+    assert ref.via == "stream"
+    assert wnode.last_stream_receipt["ref_chunks"] == 0
+    back = _fetch_state(nbs, ref.token)
+    assert back["x"].tobytes() == src["x"].tobytes()
+
+
+# ---------------------------------------------------------------------------
+# remote itineraries: store-free tours across process-backed nodes
+# ---------------------------------------------------------------------------
+
+
+def _tour_stages(publish=False):
+    from repro.core.itinerary import Stage
+    from repro.fabric import worker as fw
+
+    return [
+        Stage("B", fw.tour_read, "read", publish=publish),
+        Stage("C", fw.tour_compute, "compute", publish=publish),
+        Stage("D", fw.tour_write, "write"),
+    ]
+
+
+def _tour_expected(x):
+    from repro.fabric import worker as fw
+
+    return fw.tour_write(fw.tour_compute(fw.tour_read({"x": x.copy()})))
+
+
+def _tour_cluster(sup, tmp_path, names=("B", "C", "D"), socket_paths=None):
+    for name in names:
+        sup.spawn(name, serve_only=True,
+                  socket_path=(socket_paths or {}).get(name))
+    nbs = NBS(tmp_path / "s3")
+    nbs.add_node("A", mesh=None)
+    for name in names:
+        nbs.add_remote_node(name, sup.workers[name].address)
+    return nbs
+
+
+def test_remote_itinerary_store_free_tour(fab, tmp_path):
+    """Fig. 8 across three real worker processes: the first hop streams, the
+    node-to-node moves are worker-initiated relays, the stages run inside
+    the workers, and the product streams back — the store's hop namespace
+    stays empty for the whole tour."""
+    from repro.core.itinerary import Itinerary
+
+    sup, _ = fab
+    nbs = _tour_cluster(sup, tmp_path)
+    dhp = DHP(nbs, "A", chunk_bytes=1 << 14)
+    vias = []
+    nbs.plugins.subscribe("on_hop", lambda **kw: vias.append(kw["via"]))
+
+    x = np.random.default_rng(21).standard_normal((256, 64))
+    it = Itinerary(dhp)
+    out = it.run({"x": x.copy()}, _tour_stages())
+
+    assert list(nbs.hop_root.iterdir()) == []  # store-free, the whole way
+    # every leg streamed: no hop/relay fallback, no fetch_store return leg
+    assert not any("store" in v for v in vias), vias
+    expected = _tour_expected(x)
+    assert np.asarray(out["x"]).tobytes() == expected["x"].tobytes()
+    assert out["toured"] == 1
+    assert [n for n, _ in it.trace] == ["read", "compute", "write"]
+    for name in ("B", "C", "D"):  # every leg dropped its source copy
+        assert nbs.call(name, "svc/ping")["resident"] == 0
+
+
+def test_remote_itinerary_lambda_stage_localizes(fab, tmp_path):
+    """A stage fn the worker cannot import (lambda) no longer raises
+    NotImplementedError: the state streams back and the stage runs in the
+    driver, completing the tour with the right answer."""
+    from repro.core.itinerary import Itinerary, Stage
+    from repro.fabric import worker as fw
+
+    sup, _ = fab
+    nbs = _tour_cluster(sup, tmp_path, names=("B",))
+    dhp = DHP(nbs, "A", chunk_bytes=1 << 14)
+    x = np.random.default_rng(22).standard_normal((128, 64))
+    stages = [
+        Stage("B", fw.tour_read, "read"),
+        # a named fn whose reference the WORKER cannot import: the server's
+        # StageResolutionError must degrade to driver-side execution
+        Stage("B", fw.tour_write, "write", fn_ref="no.such.module:tour_write"),
+        Stage("B", lambda s: {**s, "x": s["x"] * 2.0}, "double"),
+    ]
+    out = Itinerary(dhp).run({"x": x.copy()}, stages)
+    expected = fw.tour_write(fw.tour_read({"x": x.copy()}))
+    expected = {**expected, "x": expected["x"] * 2.0}
+    assert np.asarray(out["x"]).tobytes() == expected["x"].tobytes()
+    assert out["toured"] == 1
+    assert list(nbs.hop_root.iterdir()) == []
+
+
+def test_streamed_fetch_returns_state_without_store(fab, tmp_path):
+    """dhp.fetch streams a resident state back over the fabric socket (the
+    resident copy is dropped only after the ack); via="store" still works
+    and GCs its transit CMI."""
+    sup, _ = fab
+    handle = sup.spawn("W", serve_only=True)
+    nbs = NBS(tmp_path / "s3")
+    nbs.add_node("A", mesh=None)
+    nbs.add_remote_node("W", handle.address)
+    dhp = DHP(nbs, "A", chunk_bytes=1 << 14)
+
+    src = {"x": np.random.default_rng(9).standard_normal((500, 64)), "step": 5}
+    ref = dhp.hop(dict(src), "W")
+    assert ref.via == "stream"
+    state = dhp.fetch(ref)
+    assert state["x"].tobytes() == src["x"].tobytes() and int(state["step"]) == 5
+    assert list(nbs.hop_root.iterdir()) == []  # no store in the path
+    assert nbs.call("W", "svc/ping")["resident"] == 0  # dropped after the ack
+
+    ref2 = dhp.hop(dict(src), "W")
+    state2 = dhp.fetch(ref2, via="store")
+    assert state2["x"].tobytes() == src["x"].tobytes()
+    assert list(nbs.hop_root.iterdir()) == []  # transit CMI GC'd after restore
+    assert nbs.call("W", "svc/ping")["resident"] == 0
+
+
+def test_remote_tour_relay_failure_falls_back_per_hop(fab, tmp_path):
+    """Fault injection: every stream INTO node C aborts, so the B->C relay
+    fails — the runner must complete the tour via the per-hop store path and
+    leave no transit CMI behind."""
+    from repro.core.itinerary import Itinerary
+
+    sup, _ = fab
+    nbs = _tour_cluster(sup, tmp_path)
+    nbs.node("C")._stream_fail_after = 1  # receiver C dies mid-stream, every time
+    vias = []
+    nbs.plugins.subscribe("on_hop", lambda **kw: vias.append(kw["via"]))
+    dhp = DHP(nbs, "A", chunk_bytes=1 << 14)
+
+    x = np.random.default_rng(23).standard_normal((256, 64))
+    out = Itinerary(dhp).run({"x": x.copy()}, _tour_stages())
+
+    assert "store" in vias  # the B->C leg store-fell-back
+    expected = _tour_expected(x)
+    assert np.asarray(out["x"]).tobytes() == expected["x"].tobytes()
+    assert list(nbs.hop_root.iterdir()) == []  # fallback GC'd its transit CMI
+    for name in ("B", "C", "D"):
+        assert nbs.call(name, "svc/ping")["resident"] == 0
+
+
+def test_remote_tour_midkill_resume_bit_identical(fab, tmp_path):
+    """The tentpole acceptance: SIGKILL a worker mid-tour, respawn it in
+    place, resume from the last published stage — the final product is
+    bit-identical to an uninterrupted tour."""
+    from repro.core.itinerary import Itinerary
+
+    sup, js = fab
+    socket_paths = {n: os.path.join(sup.socket_dir, f"{n}-fixed.sock")
+                    for n in ("B", "C", "D")}
+    nbs = _tour_cluster(sup, tmp_path, socket_paths=socket_paths)
+    x = np.random.default_rng(31).standard_normal((256, 64))
+    stages = _tour_stages(publish=True)
+
+    job_clean = js.create_job({})
+    out_clean = Itinerary(DHP(nbs, "A", js, chunk_bytes=1 << 14),
+                          job_clean.job_id).run({"x": x.copy()}, stages)
+
+    # interrupted tour: C is dead when the tour tries to move there, so the
+    # relay fails AND the per-hop store fallback cannot restore on C either
+    job = js.create_job({})
+    sup.reclaim("C", notice=False)
+    nbs.node("C").client.reconnect_timeout_s = 1.0  # fail fast, not after 10s
+    dhp = DHP(nbs, "A", js, chunk_bytes=1 << 14)
+    with pytest.raises(OSError):
+        Itinerary(dhp, job.job_id).run({"x": x.copy()}, stages)
+    j = js.read_job(job.job_id)
+    assert j.status == STATUS_CKPT  # stage "read" was published before the kill
+    # the failed fallback must NOT have destroyed the holder's copy: B keeps
+    # its resident state when the destination restore could not be confirmed
+    assert nbs.call("B", "svc/ping")["resident"] >= 1
+
+    # supervisor respawns C in place; a fresh driver resumes the tour
+    sup.spawn("C", serve_only=True, socket_path=socket_paths["C"])
+    nbs.call("C", "svc/ping")  # reconnect the proxy to the new incarnation
+    it2 = Itinerary(DHP(nbs, "A", js, chunk_bytes=1 << 14), job.job_id)
+    out2 = it2.resume(stages)
+    assert [n for n, _ in it2.trace] == ["compute", "write"]
+    assert np.asarray(out2["x"]).tobytes() == np.asarray(out_clean["x"]).tobytes()
+    assert out2["toured"] == 1
+    assert list(nbs.hop_root.iterdir()) == []
