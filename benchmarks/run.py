@@ -2,6 +2,7 @@
 """Benchmark harness entry point.
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--hop-out BENCH_hop.json]
+                                            [--spot-out BENCH_spot.json]
 
 Sections map to the paper's experiments (DESIGN.md §7):
     bench_ckpt     — Exp 2: C/R overhead + CMI size (full/delta/device-hint/async)
@@ -13,7 +14,8 @@ Sections map to the paper's experiments (DESIGN.md §7):
 
 ``--hop-out`` also records the hop section as machine-readable JSON (schema
 mirrors ``BENCH_ckpt.json``, with ``env.notes``) so the transport's perf
-trajectory is comparable across PRs.
+trajectory is comparable across PRs; ``--spot-out`` does the same for the
+spot cadence-policy sweep (goodput per policy per hazard trace).
 """
 
 from __future__ import annotations
@@ -75,12 +77,17 @@ def bench_train_rows(fast: bool) -> list[tuple[str, float, str]]:
 
 def main() -> None:
     fast = "--fast" in sys.argv
-    hop_out = None
+    hop_out = spot_out = None
     if "--hop-out" in sys.argv:
         i = sys.argv.index("--hop-out") + 1
         if i >= len(sys.argv) or sys.argv[i].startswith("--"):
             raise SystemExit("--hop-out needs a file path argument")
         hop_out = sys.argv[i]
+    if "--spot-out" in sys.argv:
+        i = sys.argv.index("--spot-out") + 1
+        if i >= len(sys.argv) or sys.argv[i].startswith("--"):
+            raise SystemExit("--spot-out needs a file path argument")
+        spot_out = sys.argv[i]
     print("name,us_per_call,derived")
     from benchmarks import bench_ckpt, bench_colocate, bench_hop, bench_spot
 
@@ -90,7 +97,12 @@ def main() -> None:
     if hop_out:
         with open(hop_out, "w") as f:
             json.dump(hop_results, f, indent=1, sort_keys=True)
-    _section("spot", bench_spot.run())
+    spot_rows, spot_results = bench_spot.bench(
+        work_steps=1200 if fast else 4000, trials=3 if fast else 5)
+    _section("spot", spot_rows)
+    if spot_out:
+        with open(spot_out, "w") as f:
+            json.dump(spot_results, f, indent=1, sort_keys=True)
     _section("colocate", bench_colocate.run(2 if fast else 4))
     _section("train", bench_train_rows(fast))
     # roofline table (requires dry-run artifacts)

@@ -1,0 +1,15 @@
+"""Chaos harness: protocol-state fault injection + the chaos matrix.
+
+``repro.chaos.faults`` is the injection layer every fabric module consults
+at named protocol states; ``repro.chaos.matrix`` enumerates the
+(protocol, state) grid and asserts recovery invariants per cell.
+"""
+
+from repro.chaos.faults import (  # noqa: F401
+    DropConnection,
+    FaultInjected,
+    FaultPlan,
+    arm,
+    fire,
+    set_role,
+)

@@ -1,0 +1,371 @@
+"""Chaos matrix: every (protocol, state) cell gets a fault and must recover.
+
+``python -m repro.chaos.matrix`` enumerates the fabric's injectable protocol
+states (see ``docs/fabric.md`` § "Chaos matrix"), arms one fault per cell via
+:mod:`repro.chaos.faults`, runs a real multi-process scenario with the fault
+landing exactly at that state, and asserts the paper's survivability
+invariants after recovery:
+
+* the final product is **bit-identical** to an uninterrupted run,
+* the store's hop namespace is empty (no leaked transit CMIs),
+* no torn CMI staging directories survive,
+* no job is left holding a stranded lease.
+
+Two scenarios carry the cells:
+
+``tour``
+    a 3-worker remote itinerary (read -> compute -> write across B/C/D,
+    streamed hops + relays + streamed fetch-back). Recovery is whatever the
+    fabric already does — transparent stream->store fallback, reconnect-
+    resend, per-hop relay fallback — plus, for faults that kill a worker
+    process, a respawn-in-place at the pinned socket and a retry of the tour
+    from the original input (the driver still holds it; the computation is
+    deterministic, so the retried product must match bit-for-bit).
+
+``job``
+    a publish/resume job on one worker. The armed fault kills the worker
+    mid-protocol (or fails the publish); replacements are spawned *without*
+    the plan (fault counters are per-process, so a respawned worker would
+    re-fire the fault) and must drive the job to "finished" from the last
+    committed CMI.
+
+Exit status is non-zero if any cell fails — CI runs ``--smoke`` (one cell
+per protocol family); the full matrix is the local soak.
+"""
+
+from __future__ import annotations
+
+import argparse
+import shutil
+import sys
+import tempfile
+import time
+import traceback
+from pathlib import Path
+
+import numpy as np
+
+from repro.chaos import faults
+from repro.core.cmi import restore_cmi
+from repro.core.dhp import DHP
+from repro.core.jobstore import STATUS_FINISHED, JobStore
+from repro.core.nbs import NBS
+from repro.fabric.supervisor import FabricSupervisor
+
+JOB_INPUT = {"seed": 3, "n": 1024, "steps": 40, "publish_every": 5}
+
+# ---------------------------------------------------------------------------
+# the matrix
+# ---------------------------------------------------------------------------
+# Every labeled protocol state appears at least once. "role" keeps sigkill
+# strikes inside worker processes — the driver (this process) must survive
+# to judge the outcome.
+
+CELLS: list[dict] = [
+    # -- hop (store-mediated) ---------------------------------------------
+    {"id": "hop.after_save:error", "scenario": "tour",
+     "spec": {"point": "hop.after_save", "action": "error", "role": "driver"}},
+    {"id": "hop.before_restore:error", "scenario": "tour",
+     "spec": {"point": "hop.before_restore", "action": "error", "role": "worker"}},
+    {"id": "hop.before_restore:sigkill", "scenario": "tour",
+     "spec": {"point": "hop.before_restore", "action": "sigkill", "role": "worker"}},
+    {"id": "hop.before_receipt:kill_conn", "scenario": "tour",
+     "spec": {"point": "hop.before_receipt", "action": "kill_conn", "role": "worker"}},
+    # -- hop_stream (streamed hop into a worker) --------------------------
+    {"id": "hop_stream.accept:kill_conn", "scenario": "tour",
+     "spec": {"point": "hop_stream.accept", "action": "kill_conn", "role": "worker"}},
+    {"id": "hop_stream.accept:sigkill", "scenario": "tour",
+     "spec": {"point": "hop_stream.accept", "action": "sigkill", "role": "worker"}},
+    {"id": "hop_stream.mid_stream:kill_conn", "scenario": "tour",
+     "spec": {"point": "hop_stream.mid_stream", "action": "kill_conn", "role": "driver"}},
+    {"id": "hop_stream.before_receipt:kill_conn", "scenario": "tour",
+     "spec": {"point": "hop_stream.before_receipt", "action": "kill_conn",
+              "role": "worker"}},
+    # -- relay (worker-initiated onward hop) ------------------------------
+    {"id": "relay.before_stream:error", "scenario": "tour",
+     "spec": {"point": "relay.before_stream", "action": "error", "role": "worker"}},
+    {"id": "relay.mid_stream:kill_conn", "scenario": "tour",
+     "spec": {"point": "relay.mid_stream", "action": "kill_conn", "role": "worker"}},
+    {"id": "relay.after_stream:error", "scenario": "tour",
+     "spec": {"point": "relay.after_stream", "action": "error", "role": "worker"}},
+    # -- fetch_stream (streamed return leg) -------------------------------
+    {"id": "fetch_stream.accept:kill_conn", "scenario": "tour",
+     "spec": {"point": "fetch_stream.accept", "action": "kill_conn", "role": "worker"}},
+    {"id": "fetch_stream.mid_pump:kill_conn", "scenario": "tour",
+     "spec": {"point": "fetch_stream.mid_pump", "action": "kill_conn", "role": "worker"}},
+    {"id": "fetch_stream.before_ack:kill_conn", "scenario": "tour",
+     "spec": {"point": "fetch_stream.before_ack", "action": "kill_conn",
+              "role": "driver"}},
+    {"id": "fetch_stream.before_drop:error", "scenario": "tour",
+     "spec": {"point": "fetch_stream.before_drop", "action": "error", "role": "worker"}},
+    # -- wire / proxy (transport itself) ----------------------------------
+    {"id": "wire.send_bulk:garble", "scenario": "tour",
+     "spec": {"point": "wire.send_bulk", "action": "garble", "role": "driver"}},
+    {"id": "wire.recv_frame:kill_conn", "scenario": "tour",
+     "spec": {"point": "wire.recv_frame", "action": "kill_conn", "role": "driver",
+              "after": 8}},
+    {"id": "proxy.request:kill_conn", "scenario": "tour",
+     "spec": {"point": "proxy.request", "action": "kill_conn", "role": "driver",
+              "after": 6}},
+    # -- publish (the paper's Q4 atomic checkpointing phase) --------------
+    {"id": "publish.before_save:sigkill", "scenario": "job",
+     "spec": {"point": "publish.before_save", "action": "sigkill", "role": "worker"}},
+    {"id": "publish.before_commit:sigkill", "scenario": "job",
+     "spec": {"point": "publish.before_commit", "action": "sigkill", "role": "worker"}},
+    {"id": "publish.before_commit:error", "scenario": "job",
+     "spec": {"point": "publish.before_commit", "action": "error", "role": "worker"}},
+    {"id": "publish.before_record:sigkill", "scenario": "job",
+     "spec": {"point": "publish.before_record", "action": "sigkill", "role": "worker",
+              "after": 1}},
+    # -- lease (claim / heartbeat) ----------------------------------------
+    {"id": "lease.after_claim:sigkill", "scenario": "job",
+     "spec": {"point": "lease.after_claim", "action": "sigkill", "role": "worker"}},
+    {"id": "lease.before_renew:sigkill", "scenario": "job", "step_ms": 75,
+     "spec": {"point": "lease.before_renew", "action": "sigkill", "role": "worker"}},
+]
+
+# one cell per protocol family — the CI-sized subset
+SMOKE_IDS = [
+    "hop.after_save:error",
+    "hop.before_receipt:kill_conn",
+    "hop_stream.mid_stream:kill_conn",
+    "relay.mid_stream:kill_conn",
+    "fetch_stream.before_ack:kill_conn",
+    "wire.send_bulk:garble",
+    "publish.before_commit:sigkill",
+    "lease.before_renew:sigkill",
+]
+
+
+# ---------------------------------------------------------------------------
+# tour scenario
+# ---------------------------------------------------------------------------
+
+_TOUR_NODES = ("B", "C", "D")
+
+
+def _tour_expected(x: np.ndarray) -> np.ndarray:
+    from repro.fabric import worker as fw
+
+    out = fw.tour_write(fw.tour_compute(fw.tour_read({"x": x.copy()})))
+    return np.asarray(out["x"])
+
+
+def _spawn_missing(sup: FabricSupervisor, socket_paths: dict[str, str]) -> None:
+    """(Re)provision any dead/missing tour worker at its pinned socket."""
+    for name in _TOUR_NODES:
+        handle = sup.workers.get(name)
+        if handle is not None and handle.alive():
+            continue
+        sup.workers.pop(name, None)
+        sup.spawn(name, serve_only=True, socket_path=socket_paths[name])
+
+
+def _attempt_tour(sup: FabricSupervisor, store_root: Path, x: np.ndarray):
+    """One full tour over fresh connections; returns (out, nbs)."""
+    from repro.core.itinerary import Itinerary, Stage
+    from repro.fabric import worker as fw
+
+    nbs = NBS(store_root)
+    nbs.add_node("A", mesh=None)
+    for name in _TOUR_NODES:
+        nbs.add_remote_node(name, sup.workers[name].address)
+    dhp = DHP(nbs, "A", chunk_bytes=1 << 14)
+    stages = [
+        Stage("B", fw.tour_read, "read"),
+        Stage("C", fw.tour_compute, "compute"),
+        Stage("D", fw.tour_write, "write"),
+    ]
+    out = Itinerary(dhp).run({"x": x.copy()}, stages)
+    return out, nbs
+
+
+def run_tour_cell(cell: dict, tmp: Path) -> None:
+    store_root = tmp / "s3"
+    sup = FabricSupervisor(str(store_root))
+    socket_paths = {
+        n: str(Path(sup.socket_dir) / f"{n}-pinned.sock") for n in _TOUR_NODES
+    }
+    x = np.random.default_rng(77).standard_normal((256, 64))
+    expected = _tour_expected(x)
+    try:
+        last: Exception | None = None
+        out = nbs = None
+        # worst case needs 1 + len(_TOUR_NODES) attempts: workers that
+        # SURVIVE attempt 0 still carry the armed plan in their env, so a
+        # sigkill cell can take out one further worker per retry before
+        # every incarnation is clean
+        for attempt in range(1 + len(_TOUR_NODES) + 1):
+            try:
+                if attempt == 0:
+                    # workers spawned inside arm() inherit the plan; the
+                    # driver-side strikes fire right here in this process
+                    with faults.arm(cell["spec"]):
+                        _spawn_missing(sup, socket_paths)
+                        out, nbs = _attempt_tour(sup, store_root, x)
+                else:
+                    # retries run clean: fresh workers must NOT inherit the
+                    # plan (per-process counters would make them re-fire it)
+                    _spawn_missing(sup, socket_paths)
+                    out, nbs = _attempt_tour(sup, store_root, x)
+                break
+            except Exception as e:  # recovery: respawn dead workers, retry
+                last = e
+                time.sleep(0.2)
+        if out is None:
+            raise AssertionError(f"tour did not recover: {last!r}")
+        got = np.asarray(out["x"])
+        if got.tobytes() != expected.tobytes():
+            raise AssertionError("recovered tour product is not bit-identical")
+        leaked = list(nbs.hop_root.iterdir())
+        if leaked:
+            raise AssertionError(f"hop namespace leaked transit CMIs: {leaked}")
+    finally:
+        sup.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# job scenario
+# ---------------------------------------------------------------------------
+
+_CLEAN_PRODUCT: bytes | None = None
+
+
+def _product_bytes(js: JobStore, job_id: str) -> bytes:
+    job = js.read_job(job_id)
+    state, _ = restore_cmi(js.cmi_root(job_id), job.product)
+    return state["w"].tobytes() + str(state["t"]).encode()
+
+
+def _clean_product() -> bytes:
+    """The uninterrupted run's product bytes (computed once, fault-free)."""
+    global _CLEAN_PRODUCT
+    if _CLEAN_PRODUCT is None:
+        tmp = Path(tempfile.mkdtemp(prefix="chaos-clean-"))
+        try:
+            js = JobStore(tmp / "jobs")
+            sup = FabricSupervisor(str(tmp / "s3"), str(tmp / "jobs"))
+            try:
+                job = js.create_job(dict(JOB_INPUT))
+                sup.run_job(job.job_id, steps=JOB_INPUT["steps"],
+                            publish_every=JOB_INPUT["publish_every"],
+                            step_ms=1, timeout_s=120)
+                _CLEAN_PRODUCT = _product_bytes(js, job.job_id)
+            finally:
+                sup.shutdown()
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+    return _CLEAN_PRODUCT
+
+
+def run_job_cell(cell: dict, tmp: Path) -> None:
+    clean = _clean_product()  # before arming: this run must stay fault-free
+    js = JobStore(tmp / "jobs")
+    sup = FabricSupervisor(str(tmp / "s3"), str(tmp / "jobs"))
+    try:
+        job = js.create_job(dict(JOB_INPUT))
+        # wait=False: the armed fault can SIGKILL the worker before its
+        # server ever answers the readiness ping — a spawn that insists on
+        # one would burn the whole spawn timeout on an already-dead process
+        spawn_kw = dict(
+            job_id=job.job_id,
+            steps=JOB_INPUT["steps"],
+            publish_every=JOB_INPUT["publish_every"],
+            step_ms=float(cell.get("step_ms", 1.0)),
+            lease_s=4.0,
+            wait=False,
+        )
+        with faults.arm(cell["spec"]):
+            handle = sup.spawn("w0", **spawn_kw)
+        try:
+            rc0 = handle.wait(timeout=90)
+        finally:
+            sup.workers.pop("w0", None)
+        # replacements run WITHOUT the plan (a respawn re-reads the env and
+        # resets the per-process counters — it would re-fire the fault)
+        for i in range(1, 4):
+            if js.read_job(job.job_id).status == STATUS_FINISHED:
+                break
+            handle = sup.spawn(f"w{i}", **spawn_kw)
+            try:
+                handle.wait(timeout=90)
+            finally:
+                sup.workers.pop(f"w{i}", None)
+        final = js.read_job(job.job_id)
+        if final.status != STATUS_FINISHED:
+            raise AssertionError(
+                f"job stuck in {final.status!r} after recovery (rc0={rc0})"
+            )
+        if _product_bytes(js, job.job_id) != clean:
+            raise AssertionError("recovered product is not bit-identical")
+        if final.lease_owner is not None:
+            raise AssertionError(f"stranded lease: {final.lease_owner!r}")
+        torn = [p.name for p in js.job_dir(job.job_id).iterdir()
+                if ".stage-" in p.name]
+        if torn:
+            raise AssertionError(f"torn CMI staging dirs survived: {torn}")
+    finally:
+        sup.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(cell: dict) -> None:
+    tmp = Path(tempfile.mkdtemp(prefix=f"chaos-{cell['id'].replace(':', '_').replace('.', '_')}-"))
+    try:
+        if cell["scenario"] == "tour":
+            run_tour_cell(cell, tmp)
+        else:
+            run_job_cell(cell, tmp)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.chaos.matrix", description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one cell per protocol family (CI-sized)")
+    ap.add_argument("--cells", nargs="*", default=None,
+                    help="run only these cell ids")
+    ap.add_argument("--list", action="store_true", help="print cell ids and exit")
+    args = ap.parse_args(argv)
+
+    cells = CELLS
+    if args.smoke:
+        cells = [c for c in CELLS if c["id"] in SMOKE_IDS]
+    if args.cells:
+        unknown = set(args.cells) - {c["id"] for c in CELLS}
+        if unknown:
+            ap.error(f"unknown cell ids: {sorted(unknown)}")
+        cells = [c for c in CELLS if c["id"] in set(args.cells)]
+    if args.list:
+        for c in cells:
+            print(c["id"])
+        return 0
+
+    failures: list[str] = []
+    t_start = time.monotonic()
+    for i, cell in enumerate(cells, 1):
+        t0 = time.monotonic()
+        try:
+            run_cell(cell)
+            status = "ok"
+        except Exception:
+            traceback.print_exc()
+            failures.append(cell["id"])
+            status = "FAIL"
+        print(f"[{i:2d}/{len(cells)}] {cell['id']:<42s} {status:>4s}  "
+              f"({time.monotonic() - t0:5.1f}s)", flush=True)
+    print(f"chaos matrix: {len(cells) - len(failures)}/{len(cells)} cells survived "
+          f"in {time.monotonic() - t_start:.1f}s")
+    if failures:
+        print("failed cells:", ", ".join(failures))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,6 +23,8 @@ import time
 from pathlib import Path
 from typing import Iterator
 
+from repro.chaos import faults
+
 COMMIT_FILE = "COMMIT"
 _STAGE_INFIX = ".stage-"
 
@@ -131,6 +133,10 @@ class CommitScope:
             # Simulated preemption mid-commit: leave the torn staging dir on
             # disk exactly as a killed process would.
             raise _InjectedCrash(str(self.dir))
+        # chaos point: data fsync'd, COMMIT not yet written — a sigkill here
+        # is the paper's Q4 torn-commit; the stage dir must stay orphaned and
+        # readers must never see this CMI
+        faults.fire("publish.before_commit")
         commit = self.dir / COMMIT_FILE
         commit.write_text(json.dumps({"committed_at": time.time()}))
         _fsync_file(commit)

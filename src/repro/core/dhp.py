@@ -48,6 +48,7 @@ from typing import Any
 
 import jax
 
+from repro.chaos import faults
 from repro.checkpoint.serializer import SaveOptions
 from repro.core.cmi import mesh_resharding_resolver, restore_cmi, save_cmi, snapshot_to_host
 from repro.core.delta import DeltaPolicy, DeltaTracker
@@ -175,6 +176,9 @@ class DHP:
         it is cleaned up here — either way the hop namespace never leaks.
         """
         try:
+            # chaos point: the transit CMI is durably saved, the restore
+            # request has not left yet — a failure here must still GC it
+            faults.fire("hop.after_save")
             out = self.nbs.call(dest, "svc/hop", cmi=name, io_threads=self.io_threads)
         except Exception:
             shutil.rmtree(self.nbs.hop_root / name, ignore_errors=True)
@@ -385,10 +389,14 @@ class DHP:
         return name
 
     def _do_publish_ckpt(self, job_id, name, state, step, meta, opts) -> None:
+        faults.fire("publish.before_save")
         save_cmi(
             self.jobstore.cmi_root(job_id), name, state, step=step,
             meta={"node": self.node, **(meta or {})}, options=opts,
         )
+        # chaos point: the CMI is committed but the job record does not name
+        # it yet — a kill here must leave the PREVIOUS publish authoritative
+        faults.fire("publish.before_record")
         self.jobstore.svc_publish_job(
             job_id, STATUS_CKPT, cmi=name, step=step,
             keep_last=self.delta.policy.keep_last,

@@ -35,6 +35,7 @@ from dataclasses import asdict, dataclass, field
 from pathlib import Path
 from typing import Any
 
+from repro.chaos import faults
 from repro.checkpoint.atomic import gc_orphans, is_committed
 from repro.checkpoint.serializer import load_manifest
 from repro.utils import logger
@@ -174,6 +175,9 @@ class JobStore:
                     return None
                 job.lease_owner, job.lease_expiry = worker, time.time() + lease_s
                 self._update(job, f"leased:{worker}")
+            # chaos point: the lease is durably recorded, the claimant has
+            # not started working — a kill here must expire into a steal
+            faults.fire("lease.after_claim")
             return job
         for jid, status in self.svc_list_jobs():
             if status == STATUS_FINISHED:
@@ -184,6 +188,7 @@ class JobStore:
                     continue
                 job.lease_owner, job.lease_expiry = worker, time.time() + lease_s
                 self._update(job, f"leased:{worker}")
+                faults.fire("lease.after_claim")
                 return job
         return None
 
@@ -194,6 +199,9 @@ class JobStore:
         lease — the caller must stop publishing for this job. Renewals do
         not append history (they would dominate it at heartbeat cadence).
         """
+        # chaos point: a sigkill here is a worker dying BETWEEN heartbeats —
+        # the lease must expire on its own and become stealable
+        faults.fire("lease.before_renew")
         with self._lock(job_id):
             job = self.read_job(job_id)
             if job.lease_owner != worker:

@@ -23,6 +23,7 @@ from __future__ import annotations
 import signal
 import threading
 import time
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -56,36 +57,256 @@ class PreemptionNotice:
         with self._lock:
             return float("inf") if self._deadline is None else max(0.0, self._deadline - time.time())
 
+    def can_fit(self, duration_s: float, *, safety: float = 2.0) -> bool:
+        """Would an action taking ``duration_s`` finish inside the grace?
+
+        ``safety`` (default 2x) covers publish-cost variance: a publish that
+        gets SIGKILLed mid-commit wastes the whole grace AND leaves a torn
+        stage dir, so workers only start one they are confident about.
+        """
+        return self.time_left() >= duration_s * safety
+
     def install_sigterm(self, grace_s: float = 120.0) -> None:
         signal.signal(signal.SIGTERM, lambda *_: self.notify(grace_s))
 
 
 @dataclass
+class HazardTrace:
+    """A per-step reclaim-hazard (and price) time series for one node class.
+
+    Real spot markets are non-stationary: hazard spikes when the on-demand
+    pool tightens and prices climb with it. A trace captures that as a plain
+    array the simulator and the fleet scheduler both index by step; past the
+    end the last value holds (markets do not un-exist).
+    """
+
+    hazard: tuple[float, ...]  # P(reclaim) at each step index
+    price: tuple[float, ...] = ()  # optional $/hour per step (same indexing)
+    notice_frac: float = 1.0  # fraction of reclaims that arrive WITH notice
+    name: str = "trace"
+
+    def hazard_at(self, step: int) -> float:
+        if not self.hazard:
+            return 0.0
+        return float(self.hazard[min(max(step, 0), len(self.hazard) - 1)])
+
+    def price_at(self, step: int) -> float:
+        if not self.price:
+            return 0.0
+        return float(self.price[min(max(step, 0), len(self.price) - 1)])
+
+    @staticmethod
+    def constant(hazard: float, steps: int = 1, *, notice_frac: float = 1.0,
+                 name: str = "constant") -> "HazardTrace":
+        return HazardTrace(hazard=(float(hazard),) * max(1, steps),
+                           notice_frac=notice_frac, name=name)
+
+    @staticmethod
+    def diurnal(base: float, peak: float, period: int, steps: int, *,
+                notice_frac: float = 1.0, name: str = "diurnal") -> "HazardTrace":
+        """Sinusoidal day/night cycle between ``base`` and ``peak`` hazard."""
+        t = np.arange(max(1, steps))
+        wave = 0.5 * (1.0 - np.cos(2.0 * np.pi * t / max(1, period)))
+        hz = base + (peak - base) * wave
+        price = 1.0 + 9.0 * wave  # price rides the same tightness signal
+        return HazardTrace(hazard=tuple(float(h) for h in hz),
+                           price=tuple(float(p) for p in price),
+                           notice_frac=notice_frac, name=name)
+
+    @staticmethod
+    def bursty(calm: float, storm: float, storm_at: int, storm_len: int,
+               steps: int, *, notice_frac: float = 1.0,
+               name: str = "bursty") -> "HazardTrace":
+        """Calm background hazard with one capacity-crunch storm window."""
+        hz = [float(calm)] * max(1, steps)
+        for i in range(storm_at, min(storm_at + storm_len, len(hz))):
+            hz[i] = float(storm)
+        return HazardTrace(hazard=tuple(hz), notice_frac=notice_frac, name=name)
+
+
+@dataclass
 class SpotSchedule:
-    """Preemption events, by step (deterministic) or hazard rate (random)."""
+    """Preemption events, by step (deterministic), hazard rate, or trace."""
 
     preempt_steps: tuple[int, ...] = ()  # deterministic: preempt before these steps
-    hazard_per_step: float = 0.0  # P(reclaim) each step
+    hazard_per_step: float = 0.0  # P(reclaim) each step (flat)
     seed: int = 0
     max_preemptions: int = 1_000_000
+    trace: HazardTrace | None = None  # non-stationary hazard (wins over flat)
+    notice_frac: float = 1.0  # P(reclaim arrives as SIGTERM-with-notice)
     _rng: np.random.Generator = field(init=False, repr=False)
+    _notice_rng: np.random.Generator = field(init=False, repr=False)
     _count: int = field(default=0, init=False)
 
     def __post_init__(self) -> None:
         self._rng = np.random.default_rng(self.seed)
+        # Separate stream for notice-type draws, consumed ONLY on hits: the
+        # hazard stream must stay one-draw-per-call (see should_preempt), so
+        # notice draws cannot share it without breaking seed determinism.
+        self._notice_rng = np.random.default_rng(self.seed ^ 0x9E3779B9)
+        if self.trace is not None:
+            self.notice_frac = self.trace.notice_frac
+
+    def _hazard_at(self, step: int) -> float:
+        if self.trace is not None:
+            return self.trace.hazard_at(step)
+        return self.hazard_per_step
 
     def should_preempt(self, step: int) -> bool:
         # Draw the hazard unconditionally (one draw per call whenever a
         # hazard is configured): short-circuiting on preempt_steps or the
         # budget would make the RNG stream depend on which steps hit, so two
         # schedules sharing a seed would diverge after the first difference.
-        hazard_hit = self.hazard_per_step > 0 and self._rng.random() < self.hazard_per_step
+        hazard = self._hazard_at(step)
+        hazard_hit = hazard > 0 and self._rng.random() < hazard
         if self._count >= self.max_preemptions:
             return False
         hit = step in self.preempt_steps or hazard_hit
         if hit:
             self._count += 1
         return hit
+
+    def draw_notice(self) -> bool:
+        """After a hit: does this reclaim come with the 2-minute notice
+        (SIGTERM) or not (straight SIGKILL)? Drawn from a dedicated stream so
+        calling or not calling this never shifts ``should_preempt``'s draws."""
+        if self.notice_frac >= 1.0:
+            return True
+        if self.notice_frac <= 0.0:
+            return False
+        return bool(self._notice_rng.random() < self.notice_frac)
+
+
+class FleetSchedule:
+    """Per-node preemption schedules with correlated fleet-wide shocks.
+
+    Real reclaims are correlated — a capacity crunch takes out many spot
+    instances in one sweep. Each node gets its own :class:`SpotSchedule`
+    (seeded from ``(seed, node name)`` so fleets are reproducible node-by-
+    node), plus a shared "common shock" stream: with probability
+    ``shock_per_step`` a step is a fleet-wide event and EVERY node's
+    ``should_preempt`` reports a hit at that step, with notice drawn from
+    the node's own stream as usual.
+    """
+
+    def __init__(
+        self,
+        traces: dict[str, HazardTrace],
+        *,
+        seed: int = 0,
+        shock_per_step: float = 0.0,
+        shock_notice_frac: float = 0.0,  # crunches usually give NO notice
+    ):
+        self.traces = dict(traces)
+        self.seed = int(seed)
+        self.shock_per_step = float(shock_per_step)
+        self.shock_notice_frac = float(shock_notice_frac)
+        self._lock = threading.Lock()
+        self._shock_rng = np.random.default_rng(self.seed ^ 0x5F3759DF)
+        # step index -> bool, drawn once and shared by every node that asks
+        # (nodes poll from different threads at their own pace; the cache is
+        # what makes the shock COMMON instead of independent per node)
+        self._shock_draws: dict[int, bool] = {}
+
+    def _shock_at(self, step: int) -> bool:
+        if self.shock_per_step <= 0:
+            return False
+        with self._lock:
+            while len(self._shock_draws) <= step:
+                i = len(self._shock_draws)
+                self._shock_draws[i] = bool(self._shock_rng.random() < self.shock_per_step)
+            return self._shock_draws[step]
+
+    def node_schedule(self, name: str) -> "_FleetNodeSchedule":
+        trace = self.traces.get(name) or self.traces.get("*") \
+            or HazardTrace.constant(0.0)
+        # crc32, not hash(): string hashing is randomized per process, and
+        # "reproducible node-by-node" must hold across runs and processes
+        node_seed = (self.seed * 1_000_003 + (zlib.crc32(name.encode()) & 0xFFFF)) & 0x7FFFFFFF
+        return _FleetNodeSchedule(
+            fleet=self,
+            schedule=SpotSchedule(seed=node_seed, trace=trace),
+        )
+
+
+@dataclass
+class _FleetNodeSchedule:
+    """One node's view of a :class:`FleetSchedule` — duck-compatible with
+    :class:`SpotSchedule` (``should_preempt`` / ``draw_notice``)."""
+
+    fleet: FleetSchedule
+    schedule: SpotSchedule
+    _shock_hit: bool = field(default=False, init=False)
+
+    def should_preempt(self, step: int) -> bool:
+        own = self.schedule.should_preempt(step)  # always draw (determinism)
+        self._shock_hit = self.fleet._shock_at(step)
+        return own or self._shock_hit
+
+    def draw_notice(self) -> bool:
+        if self._shock_hit:
+            # fleet-wide crunch: notice policy comes from the fleet, drawn
+            # from the node's dedicated notice stream to stay reproducible
+            frac = self.fleet.shock_notice_frac
+            if frac >= 1.0:
+                return True
+            if frac <= 0.0:
+                return False
+            return bool(self.schedule._notice_rng.random() < frac)
+        return self.schedule.draw_notice()
+
+
+class AdaptiveCadence:
+    """Young–Daly publish cadence from measured cost and observed hazard.
+
+    The optimal checkpoint interval for publish cost ``C`` and per-step
+    failure probability ``h`` over steps of ``s`` seconds is the Young–Daly
+    point ``n* = sqrt(2 C / (h s))`` steps. Everything on the right is
+    *measurable at runtime*: the worker times its own publishes, times its
+    steps, and reads the reclaim hazard off the market signal (or estimates
+    it from observed reclaims). The cadence then tracks the market — sparse
+    publishing while calm, dense the moment hazard spikes — instead of
+    freezing a guess at submit time.
+
+    All inputs are EMA-smoothed so one slow publish or one hazard blip does
+    not whipsaw the cadence.
+    """
+
+    def __init__(
+        self,
+        *,
+        publish_cost_s: float = 1.0,  # prior until first measurement
+        step_s: float = 0.1,
+        hazard_per_step: float = 1e-4,
+        min_every: int = 1,
+        max_every: int = 500,
+        ema: float = 0.3,
+    ):
+        self.publish_cost_s = float(publish_cost_s)
+        self.step_s = float(step_s)
+        self.hazard_per_step = float(hazard_per_step)
+        self.min_every = int(min_every)
+        self.max_every = int(max_every)
+        self.ema = float(ema)
+
+    def _blend(self, old: float, new: float) -> float:
+        return (1.0 - self.ema) * old + self.ema * float(new)
+
+    def observe_publish(self, seconds: float) -> None:
+        self.publish_cost_s = self._blend(self.publish_cost_s, seconds)
+
+    def observe_step(self, seconds: float) -> None:
+        self.step_s = self._blend(self.step_s, seconds)
+
+    def observe_hazard(self, hazard_per_step: float) -> None:
+        self.hazard_per_step = self._blend(self.hazard_per_step, hazard_per_step)
+
+    def publish_every(self) -> int:
+        """Steps between publishes: ``clamp(round(sqrt(2C / (h s))))``."""
+        h = max(self.hazard_per_step, 1e-12)
+        s = max(self.step_s, 1e-9)
+        n = np.sqrt(2.0 * self.publish_cost_s / (h * s))
+        return int(np.clip(round(n), self.min_every, self.max_every))
 
 
 def run_preemptible(

@@ -17,6 +17,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any
 
+from repro.chaos import faults
 from repro.core.nbs import Node, RemoteStateRef  # noqa: F401  (re-export)
 from repro.fabric import wire
 from repro.utils import logger
@@ -90,6 +91,9 @@ class FabricClient:
             rid = self._next_id
             for attempt in (0, 1):
                 try:
+                    # chaos point: a kill_conn here exercises exactly the
+                    # reconnect-resend (retry-safe) machinery below
+                    faults.fire("proxy.request", sock=self._sock)
                     wire.send_msg(self._sock, {"id": rid, "svc": svc, "kwargs": kwargs})
                     resp = self._reader.recv_msg()
                     break

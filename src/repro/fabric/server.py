@@ -57,6 +57,7 @@ import uuid
 from pathlib import Path
 from typing import Any, Callable
 
+from repro.chaos import faults
 from repro.core.jobstore import JobStore
 from repro.core.nbs import NBS
 from repro.fabric import stream, wire
@@ -211,7 +212,13 @@ class NodeServer:
                     if not self._serve_fetch_stream(conn, reader, req):
                         return
                     continue
-                resp = self._dispatch(req)
+                try:
+                    resp = self._dispatch(req)
+                except faults.DropConnection as e:
+                    # chaos: die at the injected protocol state without
+                    # replying — the client sees a peer death mid-request
+                    logger.warning("chaos: dropping connection at %s", e)
+                    return
                 try:
                     payload = wire.encode(resp)
                 except Exception as e:
@@ -239,6 +246,8 @@ class NodeServer:
             kwargs = dict(req.get("kwargs") or {})
             result = self._invoke(svc, kwargs)
             return {"id": rid, "ok": True, "result": result}
+        except faults.DropConnection:
+            raise  # chaos kill_conn: handled by _serve_conn, never a reply
         except Exception as e:
             return {
                 "id": rid,
@@ -287,6 +296,7 @@ class NodeServer:
             logger.info("svc/hop: dedup retry of %s -> %s", cmi, cached["token"])
             return cached
 
+        faults.fire("hop.before_restore")
         state = self.nbs.call(
             self.node_name, "svc/hop",
             cmi=cmi, store_root=store_root, io_threads=io_threads, gc=gc,
@@ -299,6 +309,7 @@ class NodeServer:
         self.resident[token] = (state, step)
         receipt = {"token": token, "step": step, "leaves": len(leaves), "node": self.node_name}
         self._hop_receipts[cmi] = receipt
+        faults.fire("hop.before_receipt")
         if len(self._hop_receipts) > 256:  # bound the dedup memory
             self._hop_receipts = {
                 k: v for k, v in self._hop_receipts.items() if v["token"] in self.resident
@@ -357,6 +368,7 @@ class NodeServer:
         """
         if token not in self.resident:
             raise KeyError(f"no resident state {token!r}")
+        faults.fire("relay.before_stream")
         state, res_step = self.resident[token]
         dest_addr = tuple(dest)
         baseline_token, baseline_grid = self._relay_baselines.get(dest_addr, (None, None))
@@ -369,6 +381,7 @@ class NodeServer:
                 chunk_bytes=int(chunk_bytes),
                 baseline_token=baseline_token,
                 baseline_grid=baseline_grid,
+                fault_point="relay.mid_stream",
                 **({"fail_after_chunks": int(fail_after_chunks)}
                    if fail_after_chunks is not None else {}),
             )
@@ -376,6 +389,7 @@ class NodeServer:
             # the receiver's end state is unknowable: never delta against it
             self._relay_baselines.pop(dest_addr, None)
             raise
+        faults.fire("relay.after_stream")
         self._relay_baselines[dest_addr] = (receipt["token"], sent_grid)
         if drop:
             self.resident.pop(token, None)
@@ -439,6 +453,7 @@ class NodeServer:
             return None
 
         try:
+            faults.fire("hop_stream.accept", sock=conn)
             wire.send_msg(conn, {
                 "id": rid, "ok": True,
                 "result": {
@@ -480,6 +495,7 @@ class NodeServer:
             "chunks": counters["chunks"],
         }
         try:
+            faults.fire("hop_stream.before_receipt", sock=conn)
             wire.send_msg(conn, {"id": rid, "ok": True, "result": result})
         except OSError:
             # sender died between eos and receipt: don't strand the state
@@ -516,6 +532,7 @@ class NodeServer:
         try:
             from repro.checkpoint.serializer import state_stream_meta
 
+            faults.fire("fetch_stream.accept", sock=conn)
             wire.send_msg(conn, {
                 "id": rid, "ok": True,
                 "result": {"accept": True, "meta": state_stream_meta(state),
@@ -523,10 +540,12 @@ class NodeServer:
             })
             _, n_chunks, _, _ = stream.pump_state_chunks(
                 conn, state, chunk_bytes=int(kwargs.get("chunk_bytes", 16 << 20)),
+                fault_point="fetch_stream.mid_pump",
             )
             ack = reader.recv_msg()
             if not (isinstance(ack, dict) and ack.get("ack")):
                 raise wire.WireError(f"expected fetch ack, got {ack!r}")
+            faults.fire("fetch_stream.before_drop", sock=conn)
         except Exception as e:
             # client never acked: keep the state resident; the connection's
             # framing state is ambiguous, so drop the connection

@@ -55,6 +55,7 @@ import time
 import uuid
 from typing import Any, Callable, Mapping
 
+from repro.chaos import faults
 from repro.checkpoint.serializer import (
     StateAssembler,
     StreamStateError,
@@ -90,11 +91,14 @@ def pump_state_chunks(
     changed_hint: Mapping[str, Any] | None = None,
     hash_threads: int = 0,
     pause_s: float = 0.0,
+    fault_point: str | None = None,
 ) -> tuple[dict, int, int, int]:
     """Send every chunk of ``state`` as bulk frames followed by eos.
 
     The shared sending half of hop streams, relays, and streamed fetches.
-    Returns ``(sent_grid, n_chunks, n_data, sent_bytes)``.
+    Returns ``(sent_grid, n_chunks, n_data, sent_bytes)``. ``fault_point``
+    names the chaos point fired once per chunk sent (the three protocols
+    sharing this pump each label their own mid-stream state).
     """
     sent_grid: dict[tuple, str] = {}
     n_chunks = n_data = sent_bytes = 0
@@ -113,6 +117,8 @@ def pump_state_chunks(
             "ref": ch.ref,
         }
         wire.send_bulk(sock, header, ch.data if not ch.ref else b"")
+        if fault_point is not None:
+            faults.fire(fault_point, sock=sock)
         sent_grid[(ch.path, bslice_key(ch.slice))] = ch.hash
         n_chunks += 1
         if not ch.ref:
@@ -137,6 +143,7 @@ def send_state_stream(
     hash_threads: int = 0,
     timeout_s: float = 300.0,
     fail_after_chunks: int | None = None,
+    fault_point: str = "hop_stream.mid_stream",
 ) -> tuple[dict, dict]:
     """Stream ``state`` to the NodeServer at ``address``.
 
@@ -182,6 +189,7 @@ def send_state_stream(
             changed_hint=changed_hint if use_baseline else None,
             hash_threads=hash_threads,
             pause_s=pause_s,
+            fault_point=fault_point,
         )
         final = reader.recv_msg()
         if not (isinstance(final, dict) and final.get("ok")):
@@ -318,6 +326,7 @@ def fetch_state_stream(
             reader, {"meta": res["meta"], "step": res.get("step", 0)},
         )
         # Only now may the server drop its copy: the state is fully here.
+        faults.fire("fetch_stream.before_ack", sock=sock)
         wire.send_msg(sock, {"id": 1, "ack": True})
         try:
             final = reader.recv_msg()

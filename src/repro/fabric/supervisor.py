@@ -27,6 +27,7 @@ import signal
 import subprocess
 import sys
 import tempfile
+import threading
 import time
 import uuid
 from dataclasses import dataclass, field
@@ -152,7 +153,13 @@ class FabricSupervisor:
         return handle
 
     def reclaim(self, name: str, *, notice: bool = True, wait_s: float = 60.0) -> int:
-        """Take the instance away. notice=True: SIGTERM; False: SIGKILL."""
+        """Take the instance away. notice=True: SIGTERM; False: SIGKILL.
+
+        The cloud's notice is a *deadline*, not a request: a worker that has
+        not exited ``wait_s`` after its SIGTERM (hung handler, SIGTERM
+        ignored) is SIGKILLed — exactly what EC2 does when the 2-minute
+        grace expires.
+        """
         handle = self.workers[name]
         sig = signal.SIGTERM if notice else signal.SIGKILL
         logger.warning("reclaiming worker %s pid=%d via %s", name, handle.pid, sig.name)
@@ -160,19 +167,50 @@ class FabricSupervisor:
             handle.proc.send_signal(sig)
         except ProcessLookupError:
             pass
-        rc = handle.wait(timeout=wait_s)
+        try:
+            rc = handle.wait(timeout=wait_s)
+        except subprocess.TimeoutExpired:
+            if not notice:
+                raise  # SIGKILL not taking effect is a real problem
+            logger.warning(
+                "worker %s ignored SIGTERM for %.1fs; escalating to SIGKILL",
+                name, wait_s,
+            )
+            handle.proc.kill()
+            rc = handle.wait(timeout=10)
         self.workers.pop(name, None)
         return rc
 
-    def shutdown(self) -> None:
-        for name in list(self.workers):
-            handle = self.workers.pop(name)
+    def shutdown(self, *, wait_s: float = 2.0) -> None:
+        """Stop every worker: SIGTERM all, bounded wait, SIGKILL stragglers.
+
+        The polite pass lets healthy workers publish their final CMI; the
+        escalation bounds teardown time against hung or SIGTERM-ignoring
+        processes (the same deadline semantics as :meth:`reclaim`).
+        """
+        handles = [self.workers.pop(name) for name in list(self.workers)]
+        for handle in handles:
             if handle.alive():
-                handle.proc.kill()
                 try:
-                    handle.wait(timeout=10)
-                except subprocess.TimeoutExpired:
+                    handle.proc.terminate()
+                except ProcessLookupError:
                     pass
+        deadline = time.monotonic() + wait_s
+        for handle in handles:
+            if handle.alive():
+                try:
+                    handle.wait(timeout=max(0.0, deadline - time.monotonic()))
+                except subprocess.TimeoutExpired:
+                    logger.warning(
+                        "worker %s still alive %.1fs after SIGTERM; killing",
+                        handle.name, wait_s,
+                    )
+                    handle.proc.kill()
+        for handle in handles:  # reap everything: no zombies
+            try:
+                handle.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                pass
         shutil.rmtree(self.socket_dir, ignore_errors=True)
 
     def __enter__(self):
@@ -215,7 +253,11 @@ class FabricSupervisor:
         )
         while True:
             if time.monotonic() > deadline:
-                self.shutdown()
+                # kill only OUR worker: run_fleet drives several run_job
+                # loops over one supervisor, so a fleet-wide shutdown here
+                # would shoot other jobs' healthy workers
+                if name in self.workers:
+                    self.reclaim(name, notice=False, wait_s=10.0)
                 raise TimeoutError(f"job {job_id} did not finish in {timeout_s}s")
             job = store.read_job(job_id)
             if job.status == STATUS_FINISHED:
@@ -238,7 +280,14 @@ class FabricSupervisor:
                         preempt = True
                 seen_step = job.step
                 if preempt and name in self.workers:
-                    self.reclaim(name, notice=notice)
+                    # per-event notice mix: a trace-driven schedule decides
+                    # whether THIS reclaim ships with the 2-minute warning
+                    # (SIGTERM) or is a no-notice capacity grab (SIGKILL)
+                    ev_notice = notice and (
+                        schedule.draw_notice()
+                        if hasattr(schedule, "draw_notice") else True
+                    )
+                    self.reclaim(name, notice=ev_notice, wait_s=grace_s + 10.0)
                     reclaims += 1
                     if incarnation >= max_restarts:
                         raise RuntimeError(f"exceeded {max_restarts} restarts")
@@ -292,6 +341,56 @@ class FabricSupervisor:
                     publish_every=publish_every, step_ms=step_ms, grace_s=grace_s,
                 )
             time.sleep(poll_s)
+
+    def run_fleet(
+        self,
+        job_ids: list[str],
+        fleet,
+        *,
+        steps: int = 50,
+        publish_every: int = 5,
+        step_ms: float = 5.0,
+        grace_s: float = 120.0,
+        max_restarts: int = 16,
+        timeout_s: float = 600.0,
+    ) -> dict[str, dict]:
+        """Drive several jobs concurrently under a :class:`FleetSchedule`.
+
+        Each job gets its own supervision thread and its own per-node hazard
+        stream from ``fleet.node_schedule``; correlated fleet shocks land on
+        every thread at the same step index — a capacity crunch takes out
+        multiple workers in one sweep, and every job must still converge to
+        "finished". Returns ``{job_id: run_job result}``; raises the first
+        per-job failure after all threads settle.
+        """
+        results: dict[str, dict] = {}
+        errors: dict[str, BaseException] = {}
+
+        def drive(jid: str, node_name: str) -> None:
+            try:
+                results[jid] = self.run_job(
+                    jid,
+                    schedule=fleet.node_schedule(node_name),
+                    steps=steps, publish_every=publish_every, step_ms=step_ms,
+                    grace_s=grace_s, max_restarts=max_restarts,
+                    timeout_s=timeout_s,
+                )
+            except BaseException as e:  # surfaced after join
+                errors[jid] = e
+
+        threads = [
+            threading.Thread(target=drive, args=(jid, f"node{i}"),
+                             name=f"fleet-{jid}", daemon=True)
+            for i, jid in enumerate(job_ids)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            jid, err = next(iter(errors.items()))
+            raise RuntimeError(f"fleet job {jid} failed: {err!r}") from err
+        return results
 
     # -- helpers ------------------------------------------------------------
     @staticmethod

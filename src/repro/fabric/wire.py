@@ -41,6 +41,8 @@ import socket
 import struct
 from typing import Any
 
+from repro.chaos import faults
+
 try:  # optional, baked into some images
     import msgpack  # type: ignore
 
@@ -132,6 +134,11 @@ def send_bulk(sock: socket.socket, header: Any, payload=b"") -> None:
     ``payload`` may be ``bytes`` or a ``memoryview``; it is written to the
     socket verbatim (two ``sendall`` calls, no copy of the payload).
     """
+    # chaos point: a garble here corrupts the payload AFTER its crc32 was
+    # computed into the header, so the receiver's integrity check must trip
+    garbled = faults.fire("wire.send_bulk", sock=sock, data=payload)
+    if garbled is not None:
+        payload = garbled
     hcodec, hbody = _encode_obj(header)
     n_payload = payload.nbytes if isinstance(payload, memoryview) else len(payload)
     length = 1 + _BULK_HDR.size + len(hbody) + n_payload
@@ -184,6 +191,7 @@ class FrameReader:
         ``("bulk", header_obj, payload_len)`` with the payload still on the
         socket — the caller MUST follow with :meth:`read_payload`.
         """
+        faults.fire("wire.recv_frame", sock=self.sock)
         head = memoryview(self._buf)[: _LEN.size]
         self._recv_into(head)
         (length,) = _LEN.unpack(head)

@@ -30,6 +30,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import signal
 import sys
 import threading
 import time
@@ -38,6 +39,7 @@ from typing import Any
 
 import numpy as np
 
+from repro.chaos import faults
 from repro.core.dhp import DHP
 from repro.core.jobstore import STATUS_CKPT, STATUS_FINISHED, JobStore, LeaseLost
 from repro.core.nbs import NBS
@@ -169,22 +171,37 @@ def _run_claimed_job(
         state = init_state(job.input)
     steps = int(job.input.get("steps", steps))
     publish_every = int(job.input.get("publish_every", publish_every))
+    last_publish_s: float | None = None  # measured cost of the last publish
     while int(state["t"]) < steps:
         if notice.imminent():
-            # 2-minute-notice path: publish what we have and exit cleanly
-            dhp.publish(job.job_id, STATUS_CKPT, state, step=int(state["t"]))
-            dhp.flush()
-            logger.warning(
-                "worker %s preempted at t=%d (%.0fs grace left); published + exiting",
-                worker_name, int(state["t"]), notice.time_left(),
-            )
+            # 2-minute-notice path: publish what we have and exit cleanly —
+            # UNLESS the measured publish cost no longer fits the remaining
+            # grace. Starting a doomed publish would get SIGKILLed
+            # mid-COMMIT and burn the grace for nothing; the last published
+            # CMI is already durable, so skipping loses only the steps since
+            # then (exactly what a no-notice kill would have lost anyway).
+            if last_publish_s is None or notice.can_fit(last_publish_s):
+                dhp.publish(job.job_id, STATUS_CKPT, state, step=int(state["t"]))
+                dhp.flush()
+                logger.warning(
+                    "worker %s preempted at t=%d (%.0fs grace left); published + exiting",
+                    worker_name, int(state["t"]), notice.time_left(),
+                )
+            else:
+                logger.warning(
+                    "worker %s preempted at t=%d: %.2fs grace < ~%.2fs publish "
+                    "cost; skipping doomed publish + exiting",
+                    worker_name, int(state["t"]), notice.time_left(), last_publish_s,
+                )
             return EXIT_PREEMPTED
         state = job_step(state)
         if step_ms > 0:
             time.sleep(step_ms / 1000.0)
         t = int(state["t"])
         if publish_every > 0 and t % publish_every == 0 and t < steps:
+            t0 = time.monotonic()
             dhp.publish(job.job_id, STATUS_CKPT, state, step=t)
+            last_publish_s = time.monotonic() - t0
     dhp.flush()
     dhp.publish(
         job.job_id, STATUS_FINISHED, product={"w": state["w"], "t": int(state["t"])},
@@ -229,13 +246,19 @@ def main(argv: list[str] | None = None) -> int:
     else:
         raise SystemExit("worker needs --socket or --tcp")
 
+    faults.set_role("worker", node=args.name)  # scope inherited fault plans
     nbs = NBS(args.store)
     nbs.add_node(args.name, mesh=None)
     jobstore = JobStore(args.jobstore) if args.jobstore else None
     server = NodeServer(nbs, args.name, address, jobstore=jobstore).start()
 
     notice = PreemptionNotice()
-    notice.install_sigterm(args.grace_s)
+    if os.environ.get("REPRO_CHAOS_IGNORE_SIGTERM"):
+        # chaos: a worker that ignores the termination notice (hung signal
+        # handler) — supervisor escalation paths are tested against this
+        signal.signal(signal.SIGTERM, signal.SIG_IGN)
+    else:
+        notice.install_sigterm(args.grace_s)
 
     if args.ready_file:
         tmp = Path(args.ready_file + ".tmp")

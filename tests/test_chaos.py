@@ -1,0 +1,148 @@
+"""Fault-injection layer: FaultPlan semantics + live chaos-matrix cells.
+
+The unit half pins the plan grammar the whole chaos subsystem depends on
+(point/role/node scoping, ``after`` skip counts, ``times`` strike budgets,
+env-keyed counter reset). The live half runs a few real matrix cells —
+multi-process, real signals — as tier-1-adjacent regression coverage; the
+full sweep is ``python -m repro.chaos.matrix``.
+"""
+
+import json
+import os
+import signal
+
+import pytest
+
+from repro.chaos import faults
+from repro.chaos.faults import DropConnection, FaultInjected, FaultPlan
+
+PER_TEST_TIMEOUT_S = int(os.environ.get("NAVP_TEST_TIMEOUT", "180"))
+
+
+@pytest.fixture(autouse=True)
+def _alarm_guard():
+    def on_alarm(signum, frame):
+        raise TimeoutError(f"chaos test exceeded {PER_TEST_TIMEOUT_S}s")
+
+    old = signal.signal(signal.SIGALRM, on_alarm)
+    signal.alarm(PER_TEST_TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+@pytest.fixture(autouse=True)
+def _driver_role():
+    """Tests run as the driver; restore whatever role the process had."""
+    faults.set_role("driver")
+    yield
+    faults.set_role("driver")
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan unit semantics
+# ---------------------------------------------------------------------------
+
+
+def test_no_plan_is_a_noop():
+    os.environ.pop(faults.ENV_VAR, None)
+    assert faults.fire("hop.after_save") is None
+    assert faults.fire("wire.send_bulk", data=b"abc") == b"abc"
+
+
+def test_arm_fires_error_then_restores_env():
+    os.environ.pop(faults.ENV_VAR, None)
+    with faults.arm({"point": "hop.after_save", "action": "error"}):
+        with pytest.raises(FaultInjected):
+            faults.fire("hop.after_save")
+    assert faults.ENV_VAR not in os.environ
+    faults.fire("hop.after_save")  # disarmed
+
+
+def test_times_budget_and_after_skip():
+    spec = {"point": "p", "action": "error", "after": 2, "times": 2}
+    with faults.arm(spec):
+        faults.fire("p")  # hit 1: skipped (after)
+        faults.fire("p")  # hit 2: skipped (after)
+        with pytest.raises(FaultInjected):
+            faults.fire("p")  # strike 1
+        with pytest.raises(FaultInjected):
+            faults.fire("p")  # strike 2
+        faults.fire("p")  # budget exhausted
+
+
+def test_role_and_node_scoping():
+    spec = {"point": "p", "action": "error", "role": "worker", "node": "B"}
+    with faults.arm(spec):
+        faults.fire("p")  # driver: no match
+        faults.set_role("worker", node="C")
+        faults.fire("p")  # wrong node: no match
+        faults.set_role("worker", node="B")
+        with pytest.raises(FaultInjected):
+            faults.fire("p")
+
+
+def test_counters_reset_when_env_value_changes():
+    with faults.arm({"point": "p", "action": "error", "times": 1}):
+        with pytest.raises(FaultInjected):
+            faults.fire("p")
+        faults.fire("p")  # spent
+    with faults.arm({"point": "p", "action": "error", "times": 1}):
+        with pytest.raises(FaultInjected):
+            faults.fire("p")  # fresh plan object, fresh counters
+
+
+def test_garble_flips_a_byte_without_mutating_the_original():
+    payload = b"\x00\x01\x02"
+    with faults.arm({"point": "wire.send_bulk", "action": "garble"}):
+        out = faults.fire("wire.send_bulk", data=payload)
+    assert bytes(out) == b"\xff\x01\x02"
+    assert payload == b"\x00\x01\x02"  # immutable input untouched
+
+
+def test_kill_conn_without_socket_raises_drop_connection():
+    with faults.arm({"point": "p", "action": "kill_conn"}):
+        with pytest.raises(DropConnection):
+            faults.fire("p")
+
+
+def test_delay_action_returns_data():
+    with faults.arm({"point": "p", "action": "delay", "delay_s": 0.01}):
+        assert faults.fire("p", data=b"x") == b"x"
+
+
+def test_plan_env_round_trips_single_dict_and_list():
+    plan = FaultPlan.from_env(json.dumps({"point": "p", "action": "error"}))
+    assert len(plan.specs) == 1
+    plan = FaultPlan.from_env(json.dumps([{"point": "a"}, {"point": "b"}]))
+    assert len(plan.specs) == 2
+
+
+# ---------------------------------------------------------------------------
+# live matrix cells (real processes, real kills)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cell_id", [
+    "hop.before_receipt:kill_conn",  # dedup resend converges, no respawn
+    "wire.send_bulk:garble",  # crc trips -> stream falls back to store
+    "publish.before_commit:sigkill",  # paper Q4: torn commit never wins
+])
+def test_live_matrix_cell(cell_id):
+    from repro.chaos import matrix
+
+    cell = next(c for c in matrix.CELLS if c["id"] == cell_id)
+    matrix.run_cell(cell)  # raises AssertionError on any invariant breach
+
+
+def test_matrix_covers_every_protocol_family():
+    """The matrix must keep covering all five protocols' labeled states."""
+    from repro.chaos import matrix
+
+    points = {c["spec"]["point"].split(".")[0] for c in matrix.CELLS}
+    assert {"hop", "hop_stream", "relay", "fetch_stream",
+            "publish", "lease", "wire", "proxy"} <= points
+    smoke = [c for c in matrix.CELLS if c["id"] in matrix.SMOKE_IDS]
+    assert len(smoke) == len(matrix.SMOKE_IDS) <= 8  # CI-sized

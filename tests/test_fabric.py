@@ -665,3 +665,80 @@ def test_remote_tour_midkill_resume_bit_identical(fab, tmp_path):
     assert np.asarray(out2["x"]).tobytes() == np.asarray(out_clean["x"]).tobytes()
     assert out2["toured"] == 1
     assert list(nbs.hop_root.iterdir()) == []
+
+
+# ---------------------------------------------------------------------------
+# supervisor escalation + lease stealing (spot-market semantics)
+# ---------------------------------------------------------------------------
+
+
+def test_reclaim_escalates_sigterm_to_sigkill(fab, monkeypatch):
+    """S2: a worker that ignores SIGTERM (hung handler) must still die —
+    the notice is a deadline, and the supervisor SIGKILLs when it expires
+    (exactly EC2's behavior at the end of the 2-minute grace)."""
+    sup, js = fab
+    monkeypatch.setenv("REPRO_CHAOS_IGNORE_SIGTERM", "1")
+    sup.spawn("stubborn", serve_only=True)
+    t0 = time.monotonic()
+    rc = sup.reclaim("stubborn", notice=True, wait_s=1.5)
+    waited = time.monotonic() - t0
+    assert rc == -signal.SIGKILL  # escalation, not a clean exit
+    assert 1.0 < waited < 30.0  # bounded by wait_s + the kill reap
+    assert "stubborn" not in sup.workers
+
+
+def test_shutdown_escalates_on_sigterm_ignorers(fab, monkeypatch):
+    """S2: shutdown() SIGTERMs the fleet, waits a bounded window, then
+    SIGKILLs stragglers — a hung worker cannot wedge teardown."""
+    sup, js = fab
+    sup.spawn("polite", serve_only=True)
+    monkeypatch.setenv("REPRO_CHAOS_IGNORE_SIGTERM", "1")
+    sup.spawn("hung", serve_only=True)
+    procs = {n: h.proc for n, h in sup.workers.items()}
+    t0 = time.monotonic()
+    sup.shutdown(wait_s=1.5)
+    assert time.monotonic() - t0 < 60.0
+    assert sup.workers == {}
+    for proc in procs.values():
+        assert proc.poll() is not None  # everyone is dead and reaped
+    assert procs["hung"].returncode == -signal.SIGKILL
+
+
+def test_lease_expiry_steal_after_holder_sigkill(fab):
+    """S3: the holder is SIGKILLed BETWEEN heartbeats; its lease must expire
+    on its own and become claimable by a steal=False rival, which then
+    drives the job to a bit-identical product."""
+    from repro.chaos import faults
+
+    sup, js = fab
+    clean = _run_clean(sup, js)
+
+    job = js.create_job(JOB_INPUT)
+    lease_s = 3.0
+    # die exactly between heartbeats: the first renew_lease SIGKILLs the
+    # holder, so the on-disk lease still has most of its term to run
+    with faults.arm({"point": "lease.before_renew", "action": "sigkill",
+                     "role": "worker"}):
+        h = sup.spawn("holder", job_id=job.job_id, steps=40, publish_every=5,
+                      step_ms=100, lease_s=lease_s, wait=False)
+    assert h.wait(timeout=60) == -signal.SIGKILL
+    sup.workers.pop("holder", None)
+
+    j = js.read_job(job.job_id)
+    assert j.lease_owner == "holder" and j.leased()  # dead but still leased
+    # a polite rival (steal=False) must NOT claim a live lease...
+    assert js.svc_get_job(job.job_id, worker="rival", steal=False) is None
+    # ...until it expires on its own (no release path ran: the holder is gone)
+    deadline = time.monotonic() + lease_s + 10
+    while js.read_job(job.job_id).leased():
+        assert time.monotonic() < deadline, "lease never expired"
+        time.sleep(0.1)
+    stolen = js.svc_get_job(job.job_id, worker="rival", lease_s=60.0, steal=False)
+    assert stolen is not None and stolen.lease_owner == "rival"
+    js.release(job.job_id)  # hand it back so a real worker can claim it
+
+    # wait=False: the rescue job is tiny and can finish before the ping lands
+    sup.spawn("rescuer", job_id=job.job_id, steps=40, publish_every=5,
+              step_ms=1, wait=False)
+    assert sup.workers["rescuer"].wait(timeout=60) == EXIT_FINISHED
+    assert _product_bytes(js, job.job_id) == clean

@@ -98,6 +98,74 @@ def test_spot_schedule_seed_determinism():
     assert hits_d[: first + 1] == hits_c[: first + 1]
 
 
+def test_notice_can_fit_publish_decision():
+    """S1 regression: a worker consults time_left() vs the measured publish
+    cost before starting a grace-window publish — a doomed publish (grace <
+    2x the cost) must be skipped, an affordable one attempted."""
+    n = PreemptionNotice()
+    assert n.can_fit(1e9)  # no notice -> infinite grace
+    n.notify(grace_s=10)
+    assert n.can_fit(4.0)  # 10 >= 4*2
+    assert not n.can_fit(6.0)  # 10 < 6*2: starting this publish is doomed
+    assert n.can_fit(6.0, safety=1.0)  # the margin is the safety factor
+    n.clear()
+    assert n.can_fit(1e9)
+
+
+def test_worker_skips_doomed_publish_on_notice(tmp_path):
+    """The worker loop itself: with a measured publish cost that cannot fit
+    the remaining grace, the imminent-notice branch must exit WITHOUT
+    publishing (the last durable CMI stays authoritative); with room to
+    spare it must publish first."""
+    from repro.core import DHP, NBS
+    from repro.core.jobstore import JobStore, STATUS_CKPT
+    from repro.fabric.worker import EXIT_PREEMPTED, _run_claimed_job
+
+    def run_one(grace_s, fake_publish_s):
+        root = tmp_path / f"g{grace_s}"
+        js = JobStore(root / "jobs")
+        job = js.create_job({"seed": 1, "n": 64, "steps": 40, "publish_every": 5})
+        nbs = NBS(root / "s3")
+        nbs.add_node("w", mesh=None)
+        dhp = DHP(nbs, "w", js)
+        notice = PreemptionNotice()
+        real_publish = dhp.publish
+        calls = []
+
+        def publish(job_id, status, state=None, **kw):
+            calls.append(int(np.asarray(state["t"])))
+            # after the first cadence publish, the notice arrives and the
+            # "measured" cost is pinned by sleeping exactly fake_publish_s
+            out = real_publish(job_id, status, state, **kw)
+            if len(calls) == 1:
+                import time as _t
+                _t.sleep(fake_publish_s)
+                notice.notify(grace_s=grace_s)
+            return out
+
+        dhp.publish = publish
+        job = js.svc_get_job(job.job_id, worker="w", lease_s=60.0)
+        rc = _run_claimed_job(
+            dhp, js, notice, job, worker_name="w", steps=40,
+            publish_every=5, step_ms=0.0,
+        )
+        assert rc == EXIT_PREEMPTED
+        return calls, js.read_job(job.job_id)
+
+    # measured cost ~0.3s, grace 0.1s: 0.1 < 0.3*2 -> the grace-window
+    # publish is doomed and must be SKIPPED (only the cadence publish ran)
+    calls, job = run_one(grace_s=0.1, fake_publish_s=0.3)
+    assert calls == [5]
+    assert job.status == STATUS_CKPT and job.step == 5
+
+    # measured cost ~0.05s, grace 60s: plenty of room -> publish then exit
+    # (the notice is polled before the next step, so the grace publish
+    # re-publishes the state at t=5 — cadence publish + grace publish)
+    calls, job = run_one(grace_s=60, fake_publish_s=0.05)
+    assert calls == [5, 5]
+    assert job.status == STATUS_CKPT and job.step == 5
+
+
 def test_run_preemptible_restarts():
     calls = []
 
