@@ -1,7 +1,8 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness entry point.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast] [--hop-out BENCH_hop.json]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--lint]
+                                            [--hop-out BENCH_hop.json]
                                             [--spot-out BENCH_spot.json]
 
 Sections map to the paper's experiments (DESIGN.md §7):
@@ -11,6 +12,12 @@ Sections map to the paper's experiments (DESIGN.md §7):
     bench_colocate — Exp 1: VIIRS→CrIS co-location stages + match kernel
     bench_train    — end-to-end smoke train step + publish cadence overhead
     roofline       — §Roofline table from the dry-run artifacts (if present)
+
+``--lint`` gates the run on navlint (``python -m repro.analysis``): the
+migration-safety lint over src/ + examples/ plus the fault-coverage
+checker. A tour that hops with an open file or publishes nondeterministic
+state produces benchmark numbers that no resumed run can reproduce, so the
+harness refuses to measure it.
 
 ``--hop-out`` also records the hop section as machine-readable JSON (schema
 mirrors ``BENCH_ckpt.json``, with ``env.notes``) so the transport's perf
@@ -76,6 +83,16 @@ def bench_train_rows(fast: bool) -> list[tuple[str, float, str]]:
 
 
 def main() -> None:
+    if "--lint" in sys.argv:
+        from pathlib import Path
+
+        from repro.analysis import main as navlint
+
+        repo = Path(__file__).resolve().parent.parent
+        rc = navlint(["--check", str(repo / "src"), str(repo / "examples"),
+                      "--coverage", "--docs", str(repo / "docs" / "fabric.md")])
+        if rc:
+            raise SystemExit(rc)
     fast = "--fast" in sys.argv
     hop_out = spot_out = None
     if "--hop-out" in sys.argv:

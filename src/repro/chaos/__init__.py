@@ -1,8 +1,11 @@
 """Chaos harness: protocol-state fault injection + the chaos matrix.
 
 ``repro.chaos.faults`` is the injection layer every fabric module consults
-at named protocol states; ``repro.chaos.matrix`` enumerates the
-(protocol, state) grid and asserts recovery invariants per cell.
+at named protocol states; ``repro.chaos.sites`` is the registry of those
+states (the single source the fire sites, the matrix, and the docs are all
+cross-checked against by ``python -m repro.analysis --coverage``);
+``repro.chaos.matrix`` enumerates the (protocol, state) grid and asserts
+recovery invariants per cell.
 """
 
 from repro.chaos.faults import (  # noqa: F401
@@ -13,3 +16,4 @@ from repro.chaos.faults import (  # noqa: F401
     fire,
     set_role,
 )
+from repro.chaos.sites import FAMILIES, SITES  # noqa: F401

@@ -172,7 +172,21 @@ def arm(*specs: dict):
     """Arm fault specs for the current process tree (sets the env var, so
     workers spawned inside the block inherit the plan). Each ``arm`` starts
     with fresh counters even when the specs are identical to the last plan
-    (the value-keyed cache alone would keep spent counters alive)."""
+    (the value-keyed cache alone would keep spent counters alive).
+
+    Dotted points are validated against :data:`repro.chaos.sites.SITES` —
+    arming ``"hop_stream.midstream"`` (typo) raises instead of silently
+    never firing. Single-token points stay unvalidated for unit tests.
+    """
+    from repro.chaos.sites import SITES, is_known
+
+    for spec in specs:
+        point = spec.get("point")
+        if isinstance(point, str) and not is_known(point):
+            raise ValueError(
+                f"unknown fault point {point!r}; registered points live in "
+                f"repro.chaos.sites.SITES ({len(SITES)} entries)"
+            )
     old = os.environ.get(ENV_VAR)
     os.environ[ENV_VAR] = json.dumps(list(specs))
     _invalidate_cache()

@@ -124,6 +124,37 @@ CELLS: list[dict] = [
      "spec": {"point": "lease.before_renew", "action": "sigkill", "role": "worker"}},
 ]
 
+def cell_registry() -> list[dict]:
+    """The matrix as machine-readable data, one normalized dict per cell.
+
+    This is what the fault-coverage checker (``python -m repro.analysis
+    --coverage``) cross-checks against the AST-extracted ``faults.fire``
+    sites and the ``docs/fabric.md`` state table: every registered site
+    must have at least one cell here, and every cell's point must be a
+    registered site.
+    """
+    from repro.chaos.sites import SITES
+
+    registry = []
+    for cell in CELLS:
+        point = cell["spec"]["point"]
+        if point not in SITES:
+            raise ValueError(
+                f"matrix cell {cell['id']!r} strikes unregistered point "
+                f"{point!r}; add it to repro.chaos.sites.SITES"
+            )
+        registry.append({
+            "id": cell["id"],
+            "point": point,
+            "family": point.split(".", 1)[0],
+            "action": cell["spec"].get("action", "error"),
+            "scenario": cell["scenario"],
+            "role": cell["spec"].get("role"),
+            "smoke": cell["id"] in SMOKE_IDS,
+        })
+    return registry
+
+
 # one cell per protocol family — the CI-sized subset
 SMOKE_IDS = [
     "hop.after_save:error",
@@ -331,7 +362,16 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--cells", nargs="*", default=None,
                     help="run only these cell ids")
     ap.add_argument("--list", action="store_true", help="print cell ids and exit")
+    ap.add_argument("--registry", action="store_true",
+                    help="print the machine-readable cell registry as JSON")
     args = ap.parse_args(argv)
+
+    registry = cell_registry()  # also validates every cell against SITES
+    if args.registry:
+        import json
+
+        print(json.dumps(registry, indent=1, sort_keys=True))
+        return 0
 
     cells = CELLS
     if args.smoke:

@@ -43,6 +43,32 @@ from repro.core.nbs import RemoteStateRef
 from repro.utils import logger
 
 
+def ref_obstacle(mod: str | None, qual: str | None, *, bound: bool = False,
+                 partial: bool = False) -> str | None:
+    """Why a ``(module, qualname)`` pair is NOT worker-addressable, or
+    ``None`` when it is.
+
+    This is the single source of the addressability rules: the runtime
+    :func:`stage_ref` applies it to live callables, and navlint's static
+    stage-ref resolver (``repro.analysis.stageref``) applies it to AST
+    nodes — so what the linter flags before a cloud run is exactly what
+    ``svc/run_stage`` would refuse (or silently localize) at runtime.
+    """
+    if bound:
+        return "bound method — the worker would misbind the state as `self`"
+    if partial:
+        return "functools.partial — not importable by name in a worker"
+    if not mod or not qual:
+        return "no module-qualified name"
+    if "<lambda>" in qual:
+        return "lambda — has no importable name"
+    if "<" in qual:
+        return "closure/nested function — its qualname is not importable"
+    if mod == "__main__":
+        return "defined in __main__ — a worker process cannot import it"
+    return None
+
+
 def stage_ref(fn: Callable) -> str | None:
     """Module-qualified reference (``pkg.mod:qualname``) for a stage
     function, or ``None`` when it is not addressable across processes:
@@ -50,11 +76,16 @@ def stage_ref(fn: Callable) -> str | None:
     resolve the unbound function and misbind the state as ``self``), and
     partials — nothing a worker can import and call as ``fn(state)``.
     """
-    if getattr(fn, "__self__", None) is not None:
-        return None
+    import functools
+
     mod = getattr(fn, "__module__", None)
     qual = getattr(fn, "__qualname__", None)
-    if not mod or not qual or "<" in qual or mod == "__main__":
+    obstacle = ref_obstacle(
+        mod, qual,
+        bound=getattr(fn, "__self__", None) is not None,
+        partial=isinstance(fn, functools.partial),
+    )
+    if obstacle is not None:
         return None
     return f"{mod}:{qual}"
 
@@ -68,6 +99,52 @@ class Stage:
     # explicit cross-process reference for fn ("pkg.mod:func" or a
     # register_stage'd name); derived from fn's module/qualname when empty
     fn_ref: str = ""
+
+
+def declared_destinations(stages: list["Stage"]) -> list[str]:
+    """Distinct stage destinations in tour order (first occurrence wins)."""
+    seen: dict[str, None] = {}
+    for st in stages:
+        seen.setdefault(st.dest, None)
+    return list(seen)
+
+
+def validate_stages(stages: list["Stage"], nbs=None) -> list[str]:
+    """Pre-flight check of a tour: one warning string per migration hazard.
+
+    Catches, before the first hop, what would otherwise surface mid-tour as
+    a runtime degradation or failure: destinations the fabric has never
+    heard of, and stage functions ``svc/run_stage`` cannot address (which
+    silently localize — the tour completes but ships the data instead of
+    the computation). The same rules run file-level, pre-run, in navlint
+    (``python -m repro.analysis``); this is the runtime half.
+    """
+    problems: list[str] = []
+    for i, st in enumerate(stages):
+        label = st.name or f"stage{i}"
+        if nbs is not None and st.dest not in nbs.nodes:
+            problems.append(
+                f"stage {label!r} hops to undeclared node {st.dest!r} "
+                f"(declared: {sorted(nbs.nodes)})"
+            )
+        if st.fn_ref:
+            continue  # explicitly addressed (register_stage'd name or ref)
+        ref = stage_ref(st.fn)
+        if ref is None:
+            import functools
+
+            obstacle = ref_obstacle(
+                getattr(st.fn, "__module__", None),
+                getattr(st.fn, "__qualname__", None),
+                bound=getattr(st.fn, "__self__", None) is not None,
+                partial=isinstance(st.fn, functools.partial),
+            )
+            problems.append(
+                f"stage {label!r} fn is not worker-addressable ({obstacle}); "
+                "remote runs will localize the state instead of shipping the "
+                "computation"
+            )
+    return problems
 
 
 def _exec_stage(dhp: DHP, st: Stage, state: Any, *, step: int = 0,
@@ -135,6 +212,9 @@ class Itinerary:
         (default) a tour ending on a process-backed node streams its final
         product back to the caller.
         """
+        if start_stage == 0:
+            for problem in validate_stages(stages, self.dhp.nbs):
+                logger.warning("itinerary pre-flight: %s", problem)
         for i in range(start_stage, len(stages)):
             st = stages[i]
             src = state.node if isinstance(state, RemoteStateRef) else self.dhp.node

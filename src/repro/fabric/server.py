@@ -74,6 +74,17 @@ def register_stage(name: str, fn: Callable) -> None:
     STAGE_REGISTRY[name] = fn
 
 
+def registered_stages() -> list[str]:
+    """Stage names addressable by short name in THIS worker process.
+
+    Exposed through ``svc/ping`` so drivers (and navlint's runtime half,
+    ``itinerary.validate_stages``) can check a ``Stage.fn_ref`` against
+    what the worker actually registered instead of discovering a
+    ``StageResolutionError`` mid-tour.
+    """
+    return sorted(STAGE_REGISTRY)
+
+
 class StageResolutionError(ValueError):
     """A stage reference could not be resolved in this worker.
 
@@ -259,7 +270,8 @@ class NodeServer:
     def _invoke(self, svc: str, kwargs: dict) -> Any:
         if svc == "svc/ping":
             base = self.nbs.call(self.node_name, "svc/ping")
-            return {**base, "pid": os.getpid(), "resident": len(self.resident)}
+            return {**base, "pid": os.getpid(), "resident": len(self.resident),
+                    "stages": registered_stages()}
         if svc == "svc/hop":
             return self._svc_hop(**kwargs)
         if svc == "svc/fetch":

@@ -1,0 +1,9 @@
+# This __init__.py makes the fixtures in this directory "package modules"
+# in navlint's eyes (importable by a worker), so NAV104 stays quiet and
+# each fixture isolates exactly the rule named in its filename. The
+# fixtures under scripts/ deliberately have NO __init__.py — that is the
+# NAV104 surface. Fixtures are linted, never imported or executed.
+#
+# Golden contract: every `# EXPECT: NAVxxx` comment marks the exact line
+# navlint must report that code at; a fixture without EXPECT comments must
+# lint clean (the near-miss half of each rule's pair).

@@ -1,0 +1,11 @@
+"""Lambda as Stage.fn: no importable name, silently localizes remotely."""
+
+from repro.core.itinerary import Itinerary, Stage
+
+
+def build_tour(dhp, job_id):
+    itinerary = Itinerary(dhp, job_id)
+    stages = [
+        Stage("data-host", lambda s: {**s, "read": True}, "read"),  # EXPECT: NAV101
+    ]
+    return itinerary, stages

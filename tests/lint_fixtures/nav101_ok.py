@@ -1,0 +1,13 @@
+"""Near-miss for NAV101: a function imported from a package module is
+worker-addressable — same tour shape, no lambda, lints clean."""
+
+from repro.core.itinerary import Itinerary, Stage
+from repro.fabric.worker import tour_read
+
+
+def build_tour(dhp, job_id):
+    itinerary = Itinerary(dhp, job_id)
+    stages = [
+        Stage("data-host", tour_read, "read"),
+    ]
+    return itinerary, stages

@@ -1,0 +1,12 @@
+"""Closure as Stage.fn: qualname contains <locals>, not importable."""
+
+from repro.core.itinerary import Stage
+
+
+def build_stages(scale):
+    def scaled(s):
+        return {**s, "x": s["x"] * scale}
+
+    return [
+        Stage("compute-host", scaled, "scale"),  # EXPECT: NAV102
+    ]

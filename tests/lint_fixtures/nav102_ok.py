@@ -1,0 +1,14 @@
+"""Near-miss for NAV102: the stage fn is module-level (the scale rides in
+the state instead of a closure cell) — importable, lints clean."""
+
+from repro.core.itinerary import Stage
+
+
+def scaled(s):
+    return {**s, "x": s["x"] * s["scale"]}
+
+
+def build_stages():
+    return [
+        Stage("compute-host", scaled, "scale"),
+    ]

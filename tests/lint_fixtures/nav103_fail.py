@@ -1,0 +1,21 @@
+"""Bound method / functools.partial as Stage.fn: the worker would misbind
+`self`, and a partial has no importable name."""
+
+from functools import partial
+
+from repro.core.itinerary import Stage
+
+
+def scale(s, k):
+    return {**s, "x": s["x"] * k}
+
+
+class Tour:
+    def step(self, s):
+        return s
+
+    def stages(self):
+        return [
+            Stage("compute-host", self.step, "step"),  # EXPECT: NAV103
+            Stage("compute-host", partial(scale, k=2.0), "scale"),  # EXPECT: NAV103
+        ]

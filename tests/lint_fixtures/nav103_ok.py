@@ -1,0 +1,11 @@
+"""Near-miss for NAV103: a module-qualified function attribute (imported
+module alias) is importable by the worker — lints clean."""
+
+import repro.fabric.worker as fw
+from repro.core.itinerary import Stage
+
+
+def build_stages():
+    return [
+        Stage("compute-host", fw.tour_compute, "compute"),
+    ]

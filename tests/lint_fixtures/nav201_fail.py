@@ -1,0 +1,11 @@
+"""Open file handle carried across a hop: the descriptor is process-local
+state that cannot ride in the CMI — it is dead on the destination node."""
+
+
+def tour(dhp, state):
+    log = open("/tmp/tour.log", "a")
+    log.write("leaving\n")
+    state = dhp.hop(state, "compute-host")  # EXPECT: NAV201
+    log.write("arrived\n")
+    log.close()
+    return state

@@ -1,0 +1,12 @@
+"""Near-miss for NAV201: both handles are finished before the hop — one
+closed explicitly, one scoped by a with-block that ends first."""
+
+
+def tour(dhp, state):
+    log = open("/tmp/tour.log", "a")
+    log.write("leaving\n")
+    log.close()
+    with open("/tmp/tour.meta", "w") as meta:
+        meta.write("granules=6\n")
+    state = dhp.hop(state, "compute-host")
+    return state

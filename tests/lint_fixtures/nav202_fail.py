@@ -1,0 +1,11 @@
+"""Live socket passed into a publish payload: sockets do not pickle, and
+even a reference held across the boundary points at a dead fd on resume."""
+
+import socket
+
+
+def checkpoint(dhp, job_id, state):
+    feed = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    feed.connect(("127.0.0.1", 9470))
+    dhp.publish(job_id, "ckpt", {"state": state, "feed": feed}, step=1)  # EXPECT: NAV202
+    return feed.recv(1024)

@@ -1,0 +1,13 @@
+"""Near-miss for NAV202: the socket is drained and closed before the
+publish, and only plain data enters the payload."""
+
+import socket
+
+
+def checkpoint(dhp, job_id, state):
+    feed = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    feed.connect(("127.0.0.1", 9470))
+    header = feed.recv(1024)
+    feed.close()
+    dhp.publish(job_id, "ckpt", {"state": state, "header": header}, step=1)
+    return header

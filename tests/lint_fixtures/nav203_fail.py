@@ -1,0 +1,13 @@
+"""Held lock across a publish: the checkpoint freezes a world in which the
+lock is taken, but the resumed process has a fresh, unlocked lock — the
+release after the boundary guards nothing."""
+
+import threading
+
+
+def checkpoint(dhp, job_id, state):
+    guard = threading.Lock()
+    guard.acquire()
+    dhp.publish(job_id, "ckpt", state, step=2)  # EXPECT: NAV203
+    guard.release()
+    return state

@@ -1,0 +1,13 @@
+"""Near-miss for NAV203: the critical section closes before the publish,
+so no lock state is live at the boundary."""
+
+import threading
+
+
+def checkpoint(dhp, job_id, state):
+    guard = threading.Lock()
+    guard.acquire()
+    state = dict(state)
+    guard.release()
+    dhp.publish(job_id, "ckpt", state, step=2)
+    return state

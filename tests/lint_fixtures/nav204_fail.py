@@ -1,0 +1,17 @@
+"""Running worker thread across a hop: the thread exists only in the
+source process; the join after the boundary waits on a thread the resumed
+process never started."""
+
+import threading
+
+
+def prefetch(s):
+    s["ready"] = True
+
+
+def tour(dhp, state):
+    loader = threading.Thread(target=prefetch, args=(state,))
+    loader.start()
+    state = dhp.hop(state, "compute-host")  # EXPECT: NAV204
+    loader.join()
+    return state

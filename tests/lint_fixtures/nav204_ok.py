@@ -1,0 +1,16 @@
+"""Near-miss for NAV204: the thread is joined before the hop, so nothing
+process-local is live at the boundary."""
+
+import threading
+
+
+def prefetch(s):
+    s["ready"] = True
+
+
+def tour(dhp, state):
+    loader = threading.Thread(target=prefetch, args=(state,))
+    loader.start()
+    loader.join()
+    state = dhp.hop(state, "compute-host")
+    return state

@@ -1,0 +1,14 @@
+"""Live generator consumed after a hop: generator frames do not pickle, so
+the iterator's position is lost at the boundary."""
+
+
+def granule_batches(xs):
+    for x in xs:
+        yield x
+
+
+def tour(dhp, state):
+    batches = granule_batches(state["granules"])
+    state = dhp.hop(state, "compute-host")  # EXPECT: NAV205
+    state["first"] = next(batches)
+    return state

@@ -1,0 +1,14 @@
+"""Near-miss for NAV205: the generator is materialized into a list before
+the hop; plain data crosses the boundary."""
+
+
+def granule_batches(xs):
+    for x in xs:
+        yield x
+
+
+def tour(dhp, state):
+    batches = list(granule_batches(state["granules"]))
+    state = dhp.hop(state, "compute-host")
+    state["first"] = batches[0]
+    return state

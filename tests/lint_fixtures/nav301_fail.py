@@ -1,0 +1,24 @@
+"""Nondeterminism inside a stage between publish points: a replayed stage
+must recompute bit-identical state, but wall-clock time and unseeded RNG
+draws differ on every run."""
+
+import random
+import time
+
+import numpy as np
+
+from repro.core.itinerary import Stage
+
+
+def compute(s):
+    s = dict(s)
+    s["stamp"] = time.time()  # EXPECT: NAV301
+    s["jitter"] = random.random()  # EXPECT: NAV301
+    rng = np.random.default_rng()  # EXPECT: NAV301
+    s["noise"] = float(rng.normal())
+    return s
+
+
+stages = [
+    Stage("compute-host", compute, "compute"),
+]

@@ -1,0 +1,23 @@
+"""Near-miss for NAV301: the RNG is seeded from state, and the clock used
+is time.monotonic for cost measurement only (explicitly allowed) — every
+replay draws the same stream."""
+
+import time
+
+import numpy as np
+
+from repro.core.itinerary import Stage
+
+
+def compute(s):
+    s = dict(s)
+    t0 = time.monotonic()
+    rng = np.random.default_rng(s["seed"])
+    s["noise"] = float(rng.normal())
+    s["compute_cost_s"] = time.monotonic() - t0
+    return s
+
+
+stages = [
+    Stage("compute-host", compute, "compute"),
+]

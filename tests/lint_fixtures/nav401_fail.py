@@ -1,0 +1,20 @@
+"""Hop to a destination the NBS never declared: the tour dies at runtime
+with an unknown-node error, after work has already been done."""
+
+from repro.core.itinerary import Stage
+from repro.core.nbs import NBS
+from repro.fabric.worker import tour_read, tour_write
+
+
+def build(dhp, state):
+    nbs = NBS("/tmp/navp-fixture")
+    nbs.add_node("data-host")
+    nbs.add_node("compute-host")
+
+    stages = [
+        Stage("data-host", tour_read, "read"),
+        Stage("archive-host", tour_write, "write"),  # EXPECT: NAV401
+    ]
+
+    state = dhp.hop(state, "gpu-host")  # EXPECT: NAV401
+    return nbs, stages, state

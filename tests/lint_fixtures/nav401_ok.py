@@ -1,0 +1,21 @@
+"""Near-miss for NAV401: every stage destination and hop target appears in
+the module's add_node declarations."""
+
+from repro.core.itinerary import Stage
+from repro.core.nbs import NBS
+from repro.fabric.worker import tour_read, tour_write
+
+
+def build(dhp, state):
+    nbs = NBS("/tmp/navp-fixture")
+    nbs.add_node("data-host")
+    nbs.add_node("compute-host")
+    nbs.add_node("archive-host")
+
+    stages = [
+        Stage("data-host", tour_read, "read"),
+        Stage("archive-host", tour_write, "write"),
+    ]
+
+    state = dhp.hop(state, "compute-host")
+    return nbs, stages, state

@@ -1,0 +1,10 @@
+"""In-place mutation of published state: the checkpoint's token describes
+the object as it was at publish time; mutating the same object afterwards
+silently diverges from what a replay would restore."""
+
+
+def checkpoint(dhp, job_id, state):
+    dhp.publish(job_id, "ckpt", state, step=3)
+    state["weights"] = state["weights"] * 0.5  # EXPECT: NAV402
+    state = dhp.hop(state, "write-host")
+    return state

@@ -1,0 +1,9 @@
+"""Near-miss for NAV402: the post-publish update rebuilds the state into a
+fresh binding first, so the published object is never mutated."""
+
+
+def checkpoint(dhp, job_id, state):
+    dhp.publish(job_id, "ckpt", state, step=3)
+    state = {**state, "weights": state["weights"] * 0.5}
+    state = dhp.hop(state, "write-host")
+    return state

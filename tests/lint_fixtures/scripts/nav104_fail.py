@@ -1,0 +1,13 @@
+"""Stage.fn defined in a script (this directory has no __init__.py): the
+function imports as __main__, which no worker process can resolve."""
+
+from repro.core.itinerary import Stage
+
+
+def read_granules(s):
+    return {**s, "granules": 6}
+
+
+stages = [
+    Stage("data-host", read_granules, "read"),  # EXPECT: NAV104
+]

@@ -1,0 +1,14 @@
+"""Near-miss for NAV104, same script directory: an explicit fn_ref names a
+register_stage'd stage, so the worker resolves it without importing this
+file — lints clean."""
+
+from repro.core.itinerary import Stage
+
+
+def read_granules(s):
+    return {**s, "granules": 6}
+
+
+stages = [
+    Stage("data-host", read_granules, "read", fn_ref="app:read_granules"),
+]

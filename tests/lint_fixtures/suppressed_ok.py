@@ -1,0 +1,20 @@
+"""Suppression fixture: the violations here are real, but each carries a
+navlint disable comment — the file must lint clean with suppressions
+counted, demonstrating both line and file-scoped grammar."""
+# navlint: disable-file=NAV301
+
+import time
+
+from repro.core.itinerary import Stage
+
+
+def compute(s):
+    s = dict(s)
+    s["stamp"] = time.time()
+    return s
+
+
+stages = [
+    Stage("compute-host", compute, "compute"),
+    Stage("compute-host", lambda s: s, "id"),  # navlint: disable=NAV101
+]

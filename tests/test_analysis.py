@@ -1,0 +1,262 @@
+"""navlint: golden-file lint tests, self-hosting (zero false positives over
+the real tree), the fault-coverage checker's drift detection in all six
+directions, CLI exit codes, and the runtime half of the addressability
+rules (itinerary.stage_ref / validate_stages).
+
+Golden contract: every ``# EXPECT: NAVxxx`` comment in a fixture marks the
+exact line that code must be reported at — nothing more, nothing less. The
+``*_ok.py`` near-miss fixtures carry no EXPECT comments and must lint
+clean, pinning the rules' precision as well as their recall.
+"""
+
+import json
+import re
+from collections import Counter
+from functools import partial
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import check_coverage, lint_paths, main
+from repro.analysis.coverage import extract_doc_points, extract_fire_sites
+from repro.chaos.sites import SITES
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = Path(__file__).resolve().parent / "lint_fixtures"
+
+_EXPECT_RE = re.compile(r"#\s*EXPECT:\s*([A-Z0-9, ]+)")
+
+
+def _fixture_files() -> list[Path]:
+    files = sorted(FIXTURES.rglob("*.py"))
+    return [f for f in files if f.name != "__init__.py"]
+
+
+def _expected(path: Path) -> Counter:
+    """(line, code) multiset promised by the fixture's EXPECT comments."""
+    expected: Counter = Counter()
+    for lineno, line in enumerate(path.read_text().splitlines(), start=1):
+        m = _EXPECT_RE.search(line)
+        if m:
+            for code in m.group(1).replace(",", " ").split():
+                expected[(lineno, code)] += 1
+    return expected
+
+
+# ---------------------------------------------------------------- goldens
+
+
+@pytest.mark.parametrize(
+    "fixture", _fixture_files(), ids=lambda p: p.relative_to(FIXTURES).as_posix()
+)
+def test_fixture_golden(fixture):
+    findings, n_files, _ = lint_paths([str(fixture)])
+    assert n_files == 1
+    actual = Counter((f.line, f.code) for f in findings)
+    assert actual == _expected(fixture), (
+        f"{fixture.name}: expected {sorted(_expected(fixture))}, "
+        f"got {sorted(actual)}:\n"
+        + "\n".join(f"  {f.line}: {f.code} {f.message}" for f in findings)
+    )
+
+
+def test_every_rule_has_a_failing_and_passing_fixture():
+    """Each NAV lint rule is demonstrated by one firing fixture and one
+    near-miss — a rule without both has no precision/recall pin."""
+    demonstrated = set()
+    for f in _fixture_files():
+        if f.name.endswith("_fail.py"):
+            demonstrated.update(code for _, code in _expected(f))
+            assert _expected(f), f"{f.name} promises no findings"
+            ok = f.with_name(f.name.replace("_fail", "_ok"))
+            assert ok.exists(), f"{f.name} has no near-miss twin"
+            assert not _expected(ok), f"{ok.name} must lint clean"
+    assert demonstrated == {
+        "NAV101", "NAV102", "NAV103", "NAV104",
+        "NAV201", "NAV202", "NAV203", "NAV204", "NAV205",
+        "NAV301", "NAV401", "NAV402",
+    }
+
+
+def test_suppressions_are_counted_not_reported():
+    findings, _, suppressed = lint_paths([str(FIXTURES / "suppressed_ok.py")])
+    assert findings == []
+    assert suppressed == 2  # one line-scoped NAV101, one file-scoped NAV301
+
+
+# ---------------------------------------------------- self-hosting (no FPs)
+
+
+def test_navlint_is_clean_over_src_and_examples():
+    """The acceptance bar: zero false positives over the real tree. The
+    fabric's own transport code opens sockets next to fault points, the
+    chaos matrix hops everywhere, the examples publish mid-tour — none of
+    it may trip the lint."""
+    findings, n_files, _ = lint_paths([str(REPO / "src"), str(REPO / "examples")])
+    assert findings == [], "\n".join(
+        f"{f.path}:{f.line}: {f.code} {f.message}" for f in findings
+    )
+    assert n_files > 50  # sanity: we really scanned the tree
+
+
+# ------------------------------------------------------------ coverage
+
+
+def test_coverage_clean_on_real_tree():
+    assert check_coverage(REPO / "src" / "repro",
+                          docs_path=REPO / "docs" / "fabric.md") == []
+
+
+def test_fire_site_extraction_matches_registry():
+    """Every SITES entry has a source-level fire site, including the three
+    dynamic spellings (fault_point= parameter defaults and kwargs)."""
+    sites = extract_fire_sites(REPO / "src" / "repro")
+    assert set(sites) == set(SITES)
+    for dynamic in ("hop_stream.mid_stream", "relay.mid_stream",
+                    "fetch_stream.mid_pump"):
+        assert sites[dynamic], f"dynamic site {dynamic} not extracted"
+
+
+def test_coverage_flags_orphaned_fire_site(tmp_path):
+    """A faults.fire() call at an unregistered point is drift: NAV501."""
+    pkg = tmp_path / "app"
+    pkg.mkdir()
+    (pkg / "__init__.py").write_text("")
+    lines = [f'    faults.fire("{p}")' for p in SITES]
+    lines.append('    faults.fire("bogus.nope")')
+    (pkg / "proto.py").write_text(
+        "from repro.chaos import faults\n\ndef run():\n" + "\n".join(lines) + "\n"
+    )
+    findings = check_coverage(tmp_path, docs_path=REPO / "docs" / "fabric.md")
+    assert [f.code for f in findings] == ["NAV501"]
+    assert "bogus.nope" in findings[0].message
+
+
+def test_coverage_flags_removed_site():
+    """Deleting a SITES entry that the code still fires and the matrix
+    still exercises: NAV501 (orphan fire) + NAV504 (orphan cell)."""
+    doctored = {k: v for k, v in SITES.items() if k != "hop.after_save"}
+    findings = check_coverage(REPO / "src" / "repro", sites=doctored,
+                              docs_path=REPO / "docs" / "fabric.md")
+    codes = {f.code for f in findings if "hop.after_save" in f.message}
+    assert {"NAV501", "NAV504"} <= codes
+    # docs still document it -> NAV506 (documented but unregistered)
+    assert "NAV506" in {f.code for f in findings}
+
+
+def test_coverage_flags_removed_cell():
+    """Deleting the matrix cells for a registered point: NAV503."""
+    from repro.chaos import matrix
+
+    doctored = [c for c in matrix.CELLS
+                if c["spec"]["point"] != "publish.before_commit"]
+    findings = check_coverage(REPO / "src" / "repro", cells=doctored,
+                              docs_path=REPO / "docs" / "fabric.md")
+    assert [f.code for f in findings] == ["NAV503"]
+    assert "publish.before_commit" in findings[0].message
+
+
+def test_coverage_flags_unfired_and_undocumented_site(tmp_path):
+    """Registering a point nobody fires, no cell exercises, and the docs
+    don't describe: NAV502 + NAV503 + NAV505."""
+    doctored = {**SITES, "hop.new_state": "a state we forgot to wire up"}
+    findings = check_coverage(REPO / "src" / "repro", sites=doctored,
+                              docs_path=REPO / "docs" / "fabric.md")
+    codes = {f.code for f in findings if "hop.new_state" in f.message}
+    assert codes == {"NAV502", "NAV503", "NAV505"}
+
+
+def test_doc_table_extraction():
+    points = extract_doc_points(REPO / "docs" / "fabric.md")
+    assert points == set(SITES)
+
+
+# ------------------------------------------------------------------ CLI
+
+
+def test_cli_exit_codes(capsys):
+    assert main(["--check", str(FIXTURES / "nav201_fail.py")]) == 1
+    assert main(["--check", str(FIXTURES / "nav201_ok.py")]) == 0
+    assert main(["--list-rules"]) == 0
+    assert main(["--check", str(FIXTURES / "does_not_exist.py")]) == 2
+    capsys.readouterr()
+
+
+def test_cli_coverage_exit_code(capsys):
+    rc = main(["--coverage",
+               "--src-root", str(REPO / "src" / "repro"),
+               "--docs", str(REPO / "docs" / "fabric.md")])
+    assert rc == 0
+    capsys.readouterr()
+
+
+def test_cli_json_output(capsys):
+    rc = main(["--check", "--json", str(FIXTURES / "nav402_fail.py")])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert out["counts"] == {"NAV402": 1}
+    (finding,) = out["findings"]
+    assert finding["code"] == "NAV402"
+    assert finding["line"] == 8
+
+
+def test_cli_reports_syntax_errors_as_nav000(tmp_path, capsys):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def half(:\n")
+    assert main(["--check", str(bad)]) == 1
+    assert "NAV000" in capsys.readouterr().out
+
+
+# ------------------------------------------- runtime half (shared rules)
+
+
+def test_stage_ref_rejects_what_navlint_rejects():
+    from repro.core.itinerary import ref_obstacle, stage_ref
+    from repro.fabric.worker import tour_read
+
+    assert stage_ref(tour_read) == "repro.fabric.worker:tour_read"
+    assert stage_ref(lambda s: s) is None
+    assert stage_ref(partial(sorted, reverse=True)) is None
+
+    def nested(s):
+        return s
+
+    assert stage_ref(nested) is None  # <locals> in qualname
+    assert ref_obstacle("pkg.mod", "fn") is None
+    assert ref_obstacle("__main__", "fn") is not None
+    assert ref_obstacle("pkg.mod", "fn", bound=True) is not None
+
+
+def test_validate_stages_preflight(tmp_path):
+    from repro.core.itinerary import Stage, declared_destinations, validate_stages
+    from repro.core.nbs import NBS
+    from repro.fabric.worker import tour_read
+
+    nbs = NBS(str(tmp_path))
+    nbs.add_node("A")
+
+    good = [Stage("A", tour_read, "read")]
+    assert validate_stages(good, nbs) == []
+    assert declared_destinations(good + good) == ["A"]
+
+    bad = [Stage("B", lambda s: s, "oops")]
+    problems = validate_stages(bad, nbs)
+    assert len(problems) == 2  # undeclared dest + unaddressable fn
+    assert any("undeclared node 'B'" in p for p in problems)
+    assert any("not worker-addressable" in p for p in problems)
+
+    # an explicit fn_ref silences the addressability half
+    reffed = [Stage("A", lambda s: s, "ok", fn_ref="app:step")]
+    assert validate_stages(reffed, nbs) == []
+
+
+def test_ping_exposes_registered_stages():
+    from repro.fabric import server
+
+    before = server.registered_stages()
+    server.register_stage("_navlint_test_stage", lambda s: s)
+    try:
+        assert "_navlint_test_stage" in server.registered_stages()
+    finally:
+        server.STAGE_REGISTRY.pop("_navlint_test_stage", None)
+    assert server.registered_stages() == before

@@ -138,11 +138,52 @@ def test_live_matrix_cell(cell_id):
 
 
 def test_matrix_covers_every_protocol_family():
-    """The matrix must keep covering all five protocols' labeled states."""
-    from repro.chaos import matrix
+    """Fault coverage is self-enforcing: instead of a hand-maintained
+    family list, the static coverage checker proves the 1:1 mapping between
+    fire sites in the source, SITES, matrix cells, and docs/fabric.md."""
+    from pathlib import Path
 
-    points = {c["spec"]["point"].split(".")[0] for c in matrix.CELLS}
-    assert {"hop", "hop_stream", "relay", "fetch_stream",
-            "publish", "lease", "wire", "proxy"} <= points
+    from repro.analysis.coverage import check_coverage
+    from repro.chaos import matrix
+    from repro.chaos.sites import FAMILIES, SITES, family
+
+    repo = Path(__file__).resolve().parent.parent
+    findings = check_coverage(
+        repo / "src" / "repro", docs_path=repo / "docs" / "fabric.md"
+    )
+    assert findings == [], "\n".join(f"{f.code}: {f.message}" for f in findings)
+
+    # every protocol family is represented in the registry and the matrix
+    assert set(FAMILIES) == {"hop", "hop_stream", "relay", "fetch_stream",
+                             "publish", "lease", "wire", "proxy"}
+    covered = {family(c["spec"]["point"]) for c in matrix.CELLS}
+    assert covered == set(FAMILIES)
+    assert {family(p) for p in SITES} == set(FAMILIES)
     smoke = [c for c in matrix.CELLS if c["id"] in matrix.SMOKE_IDS]
     assert len(smoke) == len(matrix.SMOKE_IDS) <= 8  # CI-sized
+
+
+def test_arm_rejects_unregistered_point():
+    """Typo'd dotted fault points fail fast at arm() time; single-token
+    ad-hoc points used by unit tests stay exempt."""
+    with pytest.raises(ValueError, match="unknown fault point"):
+        with faults.arm({"point": "hop.after_sve", "action": "error"}):
+            pass  # never entered
+    with faults.arm({"point": "p", "action": "error"}):  # ad-hoc: fine
+        pass
+
+
+def test_cell_registry_is_machine_readable():
+    """cell_registry() normalizes every cell and validates points against
+    SITES — the coverage checker's view of the matrix."""
+    from repro.chaos import matrix
+    from repro.chaos.sites import SITES
+
+    registry = matrix.cell_registry()
+    assert len(registry) == len(matrix.CELLS)
+    for cell in registry:
+        assert cell["point"] in SITES
+        assert cell["family"] == cell["point"].split(".")[0]
+        assert set(cell) == {"id", "point", "family", "action",
+                             "scenario", "role", "smoke"}
+    assert sum(c["smoke"] for c in registry) == len(matrix.SMOKE_IDS)
