@@ -29,6 +29,20 @@ Two scenarios carry the cells:
     re-fire the fault) and must drive the job to "finished" from the last
     committed CMI.
 
+``fleet``
+    a registry + per-host agent + agent-spawned worker, all over TCP (the
+    registry/agent layer has no unix mode — it exists to cross hosts).
+    Faults strike the registry's resolve/heartbeat paths or the agent's
+    spawn/respawn service; recovery is the SUSPECT -> DEAD detection loop,
+    the agent's backoff-retried respawn at a fresh port, and registry
+    re-resolution — the node must end ALIVE under a bumped generation (or,
+    for pure heartbeat gaps, the SAME generation with no respawn at all).
+
+The ``tour`` and ``job`` scenarios run on either transport
+(``--transport unix|tcp|both``); ``both`` proves every recovery invariant
+on the wire path real fleets use, with respawn-in-place happening at
+pinned TCP ports instead of pinned socket paths.
+
 Exit status is non-zero if any cell fails — CI runs ``--smoke`` (one cell
 per protocol family); the full matrix is the local soak.
 """
@@ -36,7 +50,10 @@ per protocol family); the full matrix is the local soak.
 from __future__ import annotations
 
 import argparse
+import os
 import shutil
+import signal
+import subprocess
 import sys
 import tempfile
 import time
@@ -122,6 +139,18 @@ CELLS: list[dict] = [
      "spec": {"point": "lease.after_claim", "action": "sigkill", "role": "worker"}},
     {"id": "lease.before_renew:sigkill", "scenario": "job", "step_ms": 75,
      "spec": {"point": "lease.before_renew", "action": "sigkill", "role": "worker"}},
+    # -- registry (name -> address resolution + liveness) ------------------
+    {"id": "registry.resolve:error", "scenario": "fleet",
+     "spec": {"point": "registry.resolve", "action": "error", "role": "driver",
+              "times": 2}},
+    {"id": "registry.heartbeat_gap:delay", "scenario": "fleet", "mode": "gap",
+     "spec": {"point": "registry.heartbeat_gap", "action": "delay",
+              "delay_s": 1.0, "role": "worker", "times": 2}},
+    # -- agent (per-host spawn/respawn service) ----------------------------
+    {"id": "agent.spawn:error", "scenario": "fleet",
+     "spec": {"point": "agent.spawn", "action": "error", "role": "agent"}},
+    {"id": "agent.respawn:error", "scenario": "fleet",
+     "spec": {"point": "agent.respawn", "action": "error", "role": "agent"}},
 ]
 
 def cell_registry() -> list[dict]:
@@ -165,6 +194,8 @@ SMOKE_IDS = [
     "wire.send_bulk:garble",
     "publish.before_commit:sigkill",
     "lease.before_renew:sigkill",
+    "registry.resolve:error",
+    "agent.respawn:error",
 ]
 
 
@@ -183,7 +214,8 @@ def _tour_expected(x: np.ndarray) -> np.ndarray:
 
 
 def _spawn_missing(sup: FabricSupervisor, socket_paths: dict[str, str]) -> None:
-    """(Re)provision any dead/missing tour worker at its pinned socket."""
+    """(Re)provision any dead/missing tour worker at its pinned address
+    (a socket path on unix, a reserved host:port on tcp)."""
     for name in _TOUR_NODES:
         handle = sup.workers.get(name)
         if handle is not None and handle.alive():
@@ -211,12 +243,10 @@ def _attempt_tour(sup: FabricSupervisor, store_root: Path, x: np.ndarray):
     return out, nbs
 
 
-def run_tour_cell(cell: dict, tmp: Path) -> None:
+def run_tour_cell(cell: dict, tmp: Path, transport: str = "unix") -> None:
     store_root = tmp / "s3"
-    sup = FabricSupervisor(str(store_root))
-    socket_paths = {
-        n: str(Path(sup.socket_dir) / f"{n}-pinned.sock") for n in _TOUR_NODES
-    }
+    sup = FabricSupervisor(str(store_root), transport=transport)
+    socket_paths = {n: sup.pin(n) for n in _TOUR_NODES}
     x = np.random.default_rng(77).standard_normal((256, 64))
     expected = _tour_expected(x)
     try:
@@ -289,15 +319,17 @@ def _clean_product() -> bytes:
     return _CLEAN_PRODUCT
 
 
-def run_job_cell(cell: dict, tmp: Path) -> None:
+def run_job_cell(cell: dict, tmp: Path, transport: str = "unix") -> None:
     clean = _clean_product()  # before arming: this run must stay fault-free
     js = JobStore(tmp / "jobs")
-    sup = FabricSupervisor(str(tmp / "s3"), str(tmp / "jobs"))
+    sup = FabricSupervisor(str(tmp / "s3"), str(tmp / "jobs"), transport=transport)
     try:
         job = js.create_job(dict(JOB_INPUT))
         # wait=False: the armed fault can SIGKILL the worker before its
         # server ever answers the readiness ping — a spawn that insists on
-        # one would burn the whole spawn timeout on an already-dead process
+        # one would burn the whole spawn timeout on an already-dead process.
+        # Addresses are pinned so tcp spawns need no ready-file round trip
+        # either (an ephemeral-port spawn must block for the resolved port).
         spawn_kw = dict(
             job_id=job.job_id,
             steps=JOB_INPUT["steps"],
@@ -307,7 +339,7 @@ def run_job_cell(cell: dict, tmp: Path) -> None:
             wait=False,
         )
         with faults.arm(cell["spec"]):
-            handle = sup.spawn("w0", **spawn_kw)
+            handle = sup.spawn("w0", socket_path=sup.pin("w0"), **spawn_kw)
         try:
             rc0 = handle.wait(timeout=90)
         finally:
@@ -317,7 +349,7 @@ def run_job_cell(cell: dict, tmp: Path) -> None:
         for i in range(1, 4):
             if js.read_job(job.job_id).status == STATUS_FINISHED:
                 break
-            handle = sup.spawn(f"w{i}", **spawn_kw)
+            handle = sup.spawn(f"w{i}", socket_path=sup.pin(f"w{i}"), **spawn_kw)
             try:
                 handle.wait(timeout=90)
             finally:
@@ -340,17 +372,101 @@ def run_job_cell(cell: dict, tmp: Path) -> None:
 
 
 # ---------------------------------------------------------------------------
+# fleet scenario (registry + agent + agent-spawned worker, TCP-native)
+# ---------------------------------------------------------------------------
+
+
+def run_fleet_cell(cell: dict, tmp: Path) -> None:
+    """Registry/agent protocol faults against a real three-role fleet.
+
+    Roles: this process is the driver (resolves through the registry), the
+    agent is a subprocess, and the worker is the agent's child — two forks
+    away, reachable only through what the registry recorded. Default shape:
+    SIGKILL the worker, then require DEAD detection, an agent respawn at a
+    fresh port under a bumped generation, and live re-resolution. ``mode:
+    gap`` cells instead open heartbeat gaps and require SUSPECT -> ALIVE
+    with NO respawn — a slow heartbeat must never be treated as a death.
+    """
+    from repro.fabric.agent import AgentClient, _src_dir
+    from repro.fabric.proxy import wait_ready
+    from repro.fabric.registry import Registry, RegistryClient, RegistryServer
+
+    registry = Registry(suspect_after_s=0.6, dead_after_s=2.5)
+    server = RegistryServer(registry).start()
+    reg_spec = f"{server.address[1]}:{server.address[2]}"
+    agent_proc = None
+    try:
+        with faults.arm(cell["spec"]):
+            # the agent inherits the armed plan (role scoping aims strikes);
+            # its own respawned children run plan-free by agent policy
+            env = dict(os.environ)
+            env["PYTHONPATH"] = _src_dir() + (
+                os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+            )
+            env.setdefault("JAX_PLATFORMS", "cpu")
+            agent_proc = subprocess.Popen(
+                [sys.executable, "-m", "repro.fabric.agent",
+                 "--registry", reg_spec, "--store", str(tmp / "s3"),
+                 "--name", "agent0", "--worker-heartbeat-s", "0.25"],
+                env=env,
+            )
+            reg = RegistryClient(server.address)
+            agent_rec = reg.wait_state("agent0", "alive", timeout=60)
+            with AgentClient(agent_rec["address"]) as agent:
+                last: Exception | None = None
+                for _ in range(4):  # agent/spawn failures are retryable
+                    try:
+                        agent.spawn("W", {"serve_only": True})
+                        break
+                    except Exception as e:
+                        last = e
+                        time.sleep(0.1)
+                else:
+                    raise AssertionError(f"agent/spawn never succeeded: {last!r}")
+                first = reg.wait_state("W", "alive", timeout=60)
+                if cell.get("mode") == "gap":
+                    reg.wait_state("W", ("suspect", "dead"), timeout=30)
+                    again = reg.wait_state("W", "alive", timeout=30)
+                    if again["generation"] != first["generation"]:
+                        raise AssertionError(
+                            "heartbeat gap caused a respawn (generation bumped)"
+                        )
+                    if again["pid"] != first["pid"]:
+                        raise AssertionError("heartbeat gap replaced the process")
+                else:
+                    # the worker is the agent's child; its pid is known only
+                    # through the registry record — the multi-host reach
+                    os.kill(first["pid"], signal.SIGKILL)
+                    reg.wait_state("W", "dead", timeout=30)
+                    second = reg.wait_state("W", "alive", timeout=60)
+                    if second["generation"] <= first["generation"]:
+                        raise AssertionError("respawn did not bump the generation")
+                    info = wait_ready(second["address"], timeout=30)
+                    if info.get("pid") == first["pid"]:
+                        raise AssertionError("re-resolved ping answered by the corpse")
+                agent.shutdown()
+        agent_proc.wait(timeout=30)
+    finally:
+        if agent_proc is not None and agent_proc.poll() is None:
+            agent_proc.kill()
+            agent_proc.wait(timeout=10)
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
 # runner
 # ---------------------------------------------------------------------------
 
 
-def run_cell(cell: dict) -> None:
+def run_cell(cell: dict, transport: str = "unix") -> None:
     tmp = Path(tempfile.mkdtemp(prefix=f"chaos-{cell['id'].replace(':', '_').replace('.', '_')}-"))
     try:
         if cell["scenario"] == "tour":
-            run_tour_cell(cell, tmp)
+            run_tour_cell(cell, tmp, transport)
+        elif cell["scenario"] == "fleet":
+            run_fleet_cell(cell, tmp)  # TCP-native: no transport dimension
         else:
-            run_job_cell(cell, tmp)
+            run_job_cell(cell, tmp, transport)
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
 
@@ -364,6 +480,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--list", action="store_true", help="print cell ids and exit")
     ap.add_argument("--registry", action="store_true",
                     help="print the machine-readable cell registry as JSON")
+    ap.add_argument("--transport", choices=("unix", "tcp", "both"), default="unix",
+                    help="transport for tour/job scenarios (fleet cells are "
+                         "TCP-native and run once regardless)")
     args = ap.parse_args(argv)
 
     registry = cell_registry()  # also validates every cell against SITES
@@ -386,20 +505,31 @@ def main(argv: list[str] | None = None) -> int:
             print(c["id"])
         return 0
 
+    transports = ("unix", "tcp") if args.transport == "both" else (args.transport,)
+    runs: list[tuple[dict, str, str]] = []
+    for cell in cells:
+        if cell["scenario"] == "fleet":
+            runs.append((cell, "tcp", cell["id"]))
+        else:
+            runs.extend(
+                (cell, t, f"{cell['id']}[{t}]" if len(transports) > 1 else cell["id"])
+                for t in transports
+            )
+
     failures: list[str] = []
     t_start = time.monotonic()
-    for i, cell in enumerate(cells, 1):
+    for i, (cell, transport, label) in enumerate(runs, 1):
         t0 = time.monotonic()
         try:
-            run_cell(cell)
+            run_cell(cell, transport)
             status = "ok"
         except Exception:
             traceback.print_exc()
-            failures.append(cell["id"])
+            failures.append(label)
             status = "FAIL"
-        print(f"[{i:2d}/{len(cells)}] {cell['id']:<42s} {status:>4s}  "
+        print(f"[{i:2d}/{len(runs)}] {label:<48s} {status:>4s}  "
               f"({time.monotonic() - t0:5.1f}s)", flush=True)
-    print(f"chaos matrix: {len(cells) - len(failures)}/{len(cells)} cells survived "
+    print(f"chaos matrix: {len(runs) - len(failures)}/{len(runs)} cells survived "
           f"in {time.monotonic() - t_start:.1f}s")
     if failures:
         print("failed cells:", ", ".join(failures))

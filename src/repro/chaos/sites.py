@@ -50,6 +50,12 @@ SITES: dict[str, str] = {
     # -- lease (claim / heartbeat) -----------------------------------------
     "lease.after_claim": "in the worker, right after winning the fcntl lease",
     "lease.before_renew": "in the worker, before each heartbeat",
+    # -- registry (name -> address resolution + liveness) ------------------
+    "registry.heartbeat_gap": "in the beating process, before each registry heartbeat",
+    "registry.resolve": "client side, before each reg/resolve lookup",
+    # -- agent (per-host spawn/respawn service) ----------------------------
+    "agent.spawn": "in the agent, on a spawn request, before the fork",
+    "agent.respawn": "in the agent's watch loop, before a failure respawn",
 }
 
 FAMILIES: tuple[str, ...] = tuple(

@@ -273,6 +273,27 @@ class JobStore:
             self._update(job, "released")
         return job
 
+    def release_worker_leases(self, worker: str) -> list[str]:
+        """Release every live lease held by ``worker`` — the registry's DEAD
+        callback calls this so a confirmed-dead node's jobs become claimable
+        *now* instead of after the remaining lease window. Leases are
+        re-checked under the per-job lock (the worker may have finished, or
+        another claimant may have stolen an expired lease already); only
+        leases still owned by ``worker`` are touched. Returns released ids.
+        """
+        released: list[str] = []
+        for job_id, status in self.svc_list_jobs():
+            if status == STATUS_FINISHED:
+                continue
+            with self._lock(job_id):
+                job = self.read_job(job_id)
+                if job.lease_owner != worker:
+                    continue
+                job.lease_owner, job.lease_expiry = None, 0.0
+                self._update(job, f"lease-released:dead:{worker}")
+                released.append(job_id)
+        return released
+
     # -- CMI lifecycle ------------------------------------------------------
     def list_cmis(self, job_id: str) -> list[str]:
         jd = self.job_dir(job_id)

@@ -109,19 +109,21 @@ class NBS:
         self.nodes[name] = node
         return node
 
-    def add_remote_node(self, name: str, address, **meta) -> Node:
+    def add_remote_node(self, name: str, address, *, resolver=None, **meta) -> Node:
         """Register a node served by another process (see ``repro.fabric``).
 
         ``address`` is a fabric address tuple — ``("unix", path)`` or
         ``("tcp", host, port)``. Calls through ``nbs.call`` are carried over
         the socket; store-mediated hops work unchanged because the store is a
-        shared filesystem.
+        shared filesystem. ``resolver`` (no-arg callable -> fresh address or
+        None, e.g. :func:`repro.fabric.registry.node_resolver`) lets the
+        proxy re-resolve the node by name after a respawn moved it.
         """
         from repro.fabric.proxy import RemoteNode  # lazy: core stays fabric-free
 
         if name in self.nodes:
             raise ValueError(f"node {name!r} already registered")
-        node = RemoteNode.connect(name, address, meta=meta)
+        node = RemoteNode.connect(name, address, meta=meta, resolver=resolver)
         self.nodes[name] = node
         return node
 

@@ -14,7 +14,14 @@ Modules:
               with the Figure-7 job loop and real SIGTERM notice handling.
   supervisor  FabricSupervisor: spawn/monitor/reclaim/replace workers;
               SpotSchedule-driven SIGTERM (2-min notice) and SIGKILL
-              (no-notice) reclaims.
+              (no-notice) reclaims. Speaks ``unix`` or ``tcp`` transports
+              and adopts agent-spawned workers it never forked.
+  registry    Node registry: ``name -> (host, port)`` with heartbeat
+              liveness (ALIVE -> SUSPECT -> DEAD) and re-resolution after
+              respawn (``python -m repro.fabric.registry``).
+  agent       Per-host agent: spawns/respawns workers on wire request and
+              reports exits to the registry
+              (``python -m repro.fabric.agent``).
 
 The in-process :class:`~repro.core.nbs.Node` stays the default backend;
 this package is opt-in per node via ``NBS.add_remote_node`` or the
@@ -27,8 +34,9 @@ which needs a shared device mesh, stays in-process.
 
 from repro.fabric.proxy import FabricClient, RemoteNode, RemoteStateRef, wait_ready  # noqa: F401
 from repro.fabric.server import NodeServer  # noqa: F401
-from repro.fabric.supervisor import FabricSupervisor, WorkerHandle  # noqa: F401
+from repro.fabric.supervisor import AgentWorkerHandle, FabricSupervisor, WorkerHandle  # noqa: F401
 
-# NOTE: repro.fabric.worker is deliberately NOT imported here — it is the
-# ``python -m repro.fabric.worker`` entrypoint, and importing it from the
-# package __init__ would trip runpy's double-import warning in every spawn.
+# NOTE: repro.fabric.worker, .registry, and .agent are deliberately NOT
+# imported here — they are ``python -m`` entrypoints, and importing them from
+# the package __init__ would trip runpy's double-import warning in every
+# spawn (import them directly: ``from repro.fabric.registry import ...``).

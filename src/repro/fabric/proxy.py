@@ -44,6 +44,11 @@ class FabricClient:
     ``on_reconnect`` (set by :class:`RemoteNode`) fires after every
     successful re-establishment: the server may be a fresh incarnation, so
     anything cached against its resident state must be invalidated.
+
+    ``resolver`` (optional, no arguments -> fresh address or None) is the
+    registry hook: it is consulted before every reconnect attempt, so a
+    worker respawned at a NEW ephemeral port is re-resolved transparently —
+    the proxy follows the *name*, not the corpse's address.
     """
 
     _RETRY_SAFE = frozenset({
@@ -51,30 +56,58 @@ class FabricClient:
         "svc/renew_lease", "svc/shutdown",
     })
 
-    def __init__(self, address, *, reconnect_timeout_s: float = 10.0):
+    def __init__(self, address, *, reconnect_timeout_s: float = 10.0,
+                 connect_timeout_s: float = wire.DEFAULT_CONNECT_TIMEOUT_S,
+                 resolver=None):
         self.address = tuple(address)
         self.reconnect_timeout_s = reconnect_timeout_s
+        self.connect_timeout_s = connect_timeout_s
+        self.resolver = resolver  # callable() -> address | None
         self.on_reconnect = None  # callable | None
-        self._sock = wire.connect(self.address)
+        self._sock = wire.connect(self.address, timeout=connect_timeout_s)
         self._reader = wire.FrameReader(self._sock)
         self._lock = threading.Lock()
         self._next_id = 0
+
+    def _re_resolve(self) -> None:
+        if self.resolver is None:
+            return
+        try:
+            fresh = self.resolver()
+        except Exception as e:
+            logger.warning("resolver for %s failed: %s", self.address, e)
+            return
+        if fresh and tuple(fresh) != self.address:
+            logger.info("fabric address re-resolved: %s -> %s",
+                        self.address, tuple(fresh))
+            self.address = tuple(fresh)
 
     def _reconnect(self) -> None:
         try:
             self._sock.close()
         except OSError:
             pass
+        # bounded exponential backoff with jitter under one overall deadline:
+        # early attempts race a respawn-in-place, later ones wait out an
+        # agent respawn + re-registration without hammering the host
         deadline = time.monotonic() + self.reconnect_timeout_s
+        delay = 0.05
         while True:
+            self._re_resolve()
             try:
-                self._sock = wire.connect(self.address)
+                self._sock = wire.connect(
+                    self.address,
+                    timeout=min(self.connect_timeout_s,
+                                max(0.1, deadline - time.monotonic())),
+                )
                 self._reader = wire.FrameReader(self._sock)
                 break
             except OSError:
                 if time.monotonic() >= deadline:
                     raise
-                time.sleep(0.1)
+                time.sleep(min(delay * wire._jitter.uniform(0.5, 1.0),
+                               max(0.0, deadline - time.monotonic())))
+                delay = min(delay * 2.0, 1.0)
         if self.on_reconnect is not None:
             self.on_reconnect()
 
@@ -158,8 +191,9 @@ class RemoteNode(Node):
     supports_fetch_stream = True
 
     @classmethod
-    def connect(cls, name: str, address, *, meta: dict | None = None) -> "RemoteNode":
-        client = FabricClient(address)
+    def connect(cls, name: str, address, *, meta: dict | None = None,
+                resolver=None) -> "RemoteNode":
+        client = FabricClient(address, resolver=resolver)
         info = client.request("svc/ping")
         node = cls(name=name, mesh=None, meta={**(meta or {}), "pid": info.get("pid")},
                    client=client)

@@ -162,6 +162,7 @@ class NodeServer:
         self._listener, self.address = wire.listen(address)
         self._stop = threading.Event()
         self._accept_thread: threading.Thread | None = None
+        self._last_accepted = None  # most recent accepted conn (test hook)
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> "NodeServer":
@@ -199,6 +200,11 @@ class NodeServer:
                 conn, _ = self._listener.accept()
             except OSError:
                 return  # listener closed
+            # accepted TCP sockets get the same policy as client sockets
+            # (NODELAY + KEEPALIVE); accepted sockets do not reliably
+            # inherit listener options
+            wire.configure_stream_socket(conn)
+            self._last_accepted = conn  # tests assert the accept-side options
             threading.Thread(
                 target=self._serve_conn, args=(conn,), name="fabric-conn", daemon=True
             ).start()

@@ -24,6 +24,7 @@ import json
 import os
 import shutil
 import signal
+import socket
 import subprocess
 import sys
 import tempfile
@@ -53,11 +54,73 @@ class WorkerHandle:
     def pid(self) -> int:
         return self.proc.pid
 
+    @property
+    def returncode(self) -> int | None:
+        return self.proc.returncode
+
     def alive(self) -> bool:
         return self.proc.poll() is None
 
     def wait(self, timeout: float | None = None) -> int:
         return self.proc.wait(timeout=timeout)
+
+    def send_signal(self, sig: int) -> None:
+        self.proc.send_signal(sig)
+
+    def terminate(self) -> None:
+        self.proc.terminate()
+
+    def kill(self) -> None:
+        self.proc.kill()
+
+
+@dataclass
+class AgentWorkerHandle:
+    """A worker the supervisor did NOT fork: it lives behind a host agent.
+
+    Signals, liveness, and exit codes all travel over the agent's wire
+    services — the duck type matches :class:`WorkerHandle`, so ``reclaim``/
+    ``shutdown``/``run_job`` manage foreign fleets unchanged. A signal sent
+    through this handle is a *deliberate* stop: the agent disables its
+    auto-respawn for that child first (failure-respawn stays reserved for
+    deaths the agent did not order).
+    """
+
+    name: str
+    agent: "object"  # repro.fabric.agent.AgentClient (kept lazy: jax-free)
+    pid: int
+    address: tuple | None = None
+    ready_file: str = ""
+
+    def _info(self) -> dict | None:
+        for child in self.agent.list_children():
+            if child["name"] == self.name:
+                return child
+        return None
+
+    @property
+    def returncode(self) -> int | None:
+        info = self._info()
+        return None if info is None else info["rc"]
+
+    def alive(self) -> bool:
+        info = self._info()
+        return info is not None and info["state"] == "running"
+
+    def wait(self, timeout: float | None = None) -> int:
+        rc = self.agent.wait_child(self.name, timeout_s=timeout)
+        if rc is None:
+            raise subprocess.TimeoutExpired(f"agent:{self.name}", timeout or 0.0)
+        return rc
+
+    def send_signal(self, sig: int) -> None:
+        self.agent.stop_child(self.name, sig, respawn=False)
+
+    def terminate(self) -> None:
+        self.send_signal(signal.SIGTERM)
+
+    def kill(self) -> None:
+        self.send_signal(signal.SIGKILL)
 
 
 @dataclass
@@ -67,6 +130,13 @@ class FabricSupervisor:
     python: str = sys.executable
     spawn_timeout_s: float = 90.0
     socket_dir: str = ""
+    # "unix" (default: sockets under socket_dir) or "tcp" (127.0.0.1,
+    # ephemeral ports — the wire path real multi-host fleets use)
+    transport: str = "unix"
+    # registry host:port tuple; when set, every spawned worker registers
+    # itself and heartbeats there, and fleet handles resolve through it
+    registry_addr: tuple | None = None
+    heartbeat_s: float = 0.5
     workers: dict[str, WorkerHandle] = field(default_factory=dict)
     incarnations: int = 0
 
@@ -75,8 +145,21 @@ class FabricSupervisor:
             # unix socket paths are capped at ~107 bytes; pytest tmp dirs can
             # blow that, so sockets live in their own short-lived /tmp dir
             self.socket_dir = tempfile.mkdtemp(prefix="navp-fab-")
+        if self.transport not in ("unix", "tcp"):
+            raise ValueError(f"unknown transport {self.transport!r}")
 
     # -- spawn / reclaim ----------------------------------------------------
+    def pin(self, name: str) -> str:
+        """A stable bind spec replacements can respawn *in place* at:
+        a socket path for unix, a reserved ``host:port`` for tcp."""
+        if self.transport == "tcp":
+            with socket.socket() as probe:
+                probe.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+                probe.bind(("127.0.0.1", 0))
+                port = probe.getsockname()[1]
+            return f"127.0.0.1:{port}"
+        return os.path.join(self.socket_dir, f"{name}-pinned.sock")
+
     def spawn(
         self,
         name: str,
@@ -96,18 +179,27 @@ class FabricSupervisor:
         """Provision a worker process and (unless ``wait=False``) wait for
         its server to answer. ``wait=False`` suits racing claimants that may
         legitimately exit before ever being pinged. ``socket_path`` pins the
-        listen address — a replacement worker spawned at a dead worker's
-        path is a respawn-in-place, and clients reconnect transparently."""
+        listen address (a unix path or a tcp ``host:port`` spec, see
+        :meth:`pin`) — a replacement worker spawned at a dead worker's
+        address is a respawn-in-place, and clients reconnect transparently.
+        On tcp without a pin the worker binds an ephemeral port; the real
+        address comes back through the ready-file (and the registry, when
+        one is configured)."""
         os.makedirs(self.socket_dir, exist_ok=True)
-        sock = socket_path or os.path.join(
-            self.socket_dir, f"{name}-{uuid.uuid4().hex[:6]}.sock"
-        )
-        ready = sock + ".ready"
+        ready = os.path.join(self.socket_dir, f"{name}-{uuid.uuid4().hex[:6]}.ready")
+        if self.transport == "tcp":
+            bind = socket_path or "127.0.0.1:0"
+            addr_args = ["--tcp", bind]
+        else:
+            bind = socket_path or os.path.join(
+                self.socket_dir, f"{name}-{uuid.uuid4().hex[:6]}.sock"
+            )
+            addr_args = ["--socket", bind]
         cmd = [
             self.python, "-m", "repro.fabric.worker",
             "--name", name,
             "--store", str(self.store_root),
-            "--socket", sock,
+            *addr_args,
             "--ready-file", ready,
             "--steps", str(steps),
             "--publish-every", str(publish_every),
@@ -115,6 +207,11 @@ class FabricSupervisor:
             "--lease-s", str(lease_s),
             "--grace-s", str(grace_s),
         ]
+        if self.registry_addr is not None:
+            cmd += [
+                "--registry", f"{self.registry_addr[1]}:{self.registry_addr[2]}",
+                "--heartbeat-s", str(self.heartbeat_s),
+            ]
         if self.jobstore_root:
             cmd += ["--jobstore", str(self.jobstore_root)]
         if job_id is not None:
@@ -131,7 +228,16 @@ class FabricSupervisor:
         # workers are host-CPU nodes; keep their jax single-device and quiet
         env.setdefault("JAX_PLATFORMS", "cpu")
         proc = subprocess.Popen(cmd, env=env)
-        address = ("unix", sock)
+        if self.transport == "tcp":
+            host, _, port = bind.rpartition(":")
+            if int(port or 0):
+                address = ("tcp", host or "127.0.0.1", int(port))
+            else:
+                # ephemeral bind: the worker announces the resolved port in
+                # its ready-file before it starts serving
+                address = self._await_ready_address(proc, name, ready)
+        else:
+            address = ("unix", bind)
         if wait:
             try:
                 wait_ready(address, timeout=self.spawn_timeout_s)
@@ -152,6 +258,46 @@ class FabricSupervisor:
         logger.info("spawned worker %s pid=%d on %s", name, proc.pid, address)
         return handle
 
+    def _await_ready_address(
+        self, proc: subprocess.Popen, name: str, ready: str
+    ) -> tuple:
+        """Poll for the worker's ready-file and return the address it bound.
+
+        Only needed for ephemeral tcp binds: with port 0 the listen address
+        does not exist until the worker resolves it, so the ready-file is the
+        address channel (same contract ``read_ready`` exposes to tests)."""
+        deadline = time.monotonic() + self.spawn_timeout_s
+        while time.monotonic() < deadline:
+            if os.path.exists(ready):
+                try:
+                    return self.read_ready(ready)["address"]
+                except (OSError, json.JSONDecodeError, KeyError):
+                    pass  # racing the atomic rename; retry
+            if proc.poll() is not None:
+                raise RuntimeError(
+                    f"worker {name} died before announcing its address "
+                    f"(rc={proc.returncode})"
+                )
+            time.sleep(0.01)
+        proc.kill()
+        try:
+            proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            pass
+        raise TimeoutError(f"worker {name} never announced its address")
+
+    def adopt(self, name: str, agent, *, address: tuple | None = None,
+              pid: int = 0) -> "AgentWorkerHandle":
+        """Take supervision of a worker some host agent spawned.
+
+        The returned handle routes signals/waits through the agent's wire
+        services, so ``reclaim``/``shutdown``/``run_job`` manage a fleet this
+        process never forked — the multi-host role split."""
+        handle = AgentWorkerHandle(name=name, agent=agent, pid=pid, address=address)
+        self.workers[name] = handle
+        self.incarnations += 1
+        return handle
+
     def reclaim(self, name: str, *, notice: bool = True, wait_s: float = 60.0) -> int:
         """Take the instance away. notice=True: SIGTERM; False: SIGKILL.
 
@@ -164,7 +310,7 @@ class FabricSupervisor:
         sig = signal.SIGTERM if notice else signal.SIGKILL
         logger.warning("reclaiming worker %s pid=%d via %s", name, handle.pid, sig.name)
         try:
-            handle.proc.send_signal(sig)
+            handle.send_signal(sig)
         except ProcessLookupError:
             pass
         try:
@@ -176,7 +322,7 @@ class FabricSupervisor:
                 "worker %s ignored SIGTERM for %.1fs; escalating to SIGKILL",
                 name, wait_s,
             )
-            handle.proc.kill()
+            handle.kill()
             rc = handle.wait(timeout=10)
         self.workers.pop(name, None)
         return rc
@@ -192,7 +338,7 @@ class FabricSupervisor:
         for handle in handles:
             if handle.alive():
                 try:
-                    handle.proc.terminate()
+                    handle.terminate()
                 except ProcessLookupError:
                     pass
         deadline = time.monotonic() + wait_s
@@ -205,7 +351,7 @@ class FabricSupervisor:
                         "worker %s still alive %.1fs after SIGTERM; killing",
                         handle.name, wait_s,
                     )
-                    handle.proc.kill()
+                    handle.kill()
         for handle in handles:  # reap everything: no zombies
             try:
                 handle.wait(timeout=10)
@@ -325,7 +471,7 @@ class FabricSupervisor:
                 continue
             handle = self.workers.get(name)
             if handle is not None and not handle.alive():
-                rc = handle.proc.returncode
+                rc = handle.returncode
                 self.workers.pop(name, None)
                 job = store.read_job(job_id)
                 if job.status == STATUS_FINISHED:

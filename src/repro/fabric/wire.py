@@ -37,8 +37,11 @@ from __future__ import annotations
 
 import base64
 import json
+import os
+import random
 import socket
 import struct
+import time
 from typing import Any
 
 from repro.chaos import faults
@@ -235,21 +238,79 @@ def recv_msg(sock: socket.socket) -> Any:
 # ---------------------------------------------------------------------------
 
 
-def connect(address) -> socket.socket:
+# A dead/blackholed TCP host must fail fast, not block for the OS default
+# (minutes of SYN retries). Every fabric connect goes through this cap.
+DEFAULT_CONNECT_TIMEOUT_S = 5.0
+
+# per-process seeded jitter for reconnect backoff: deterministic enough for
+# navlint, different per process so a fleet reconnecting after one reclaim
+# doesn't stampede the replacement in lockstep
+_jitter = random.Random(os.getpid())
+
+
+def configure_stream_socket(sock: socket.socket) -> socket.socket:
+    """Apply the fabric's TCP socket policy (no-op for unix sockets).
+
+    * ``TCP_NODELAY``: control frames are tiny and strictly request/response;
+      Nagle's 40ms coalescing delay would stack once per hop round-trip.
+    * ``SO_KEEPALIVE``: a worker that vanishes without a FIN (host gone,
+      spot instance reclaimed at the hypervisor) must eventually surface as
+      a dead connection instead of a silent forever-block.
+
+    Called on BOTH ends: ``connect`` applies it to client sockets, and every
+    server accept loop (NodeServer, registry, agent) applies it to accepted
+    connections — accepted sockets do not reliably inherit listener options.
+    """
+    if sock.family in (socket.AF_INET, getattr(socket, "AF_INET6", socket.AF_INET)):
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_KEEPALIVE, 1)
+    return sock
+
+
+def connect(
+    address,
+    *,
+    timeout: float = DEFAULT_CONNECT_TIMEOUT_S,
+    attempts: int = 1,
+    backoff_s: float = 0.05,
+    max_backoff_s: float = 1.0,
+) -> socket.socket:
     """Open a client socket to a fabric address.
 
     ``("unix", path)`` or ``("tcp", host, port)``.
+
+    ``timeout`` bounds each connection *attempt* (the returned socket is put
+    back into blocking mode). With ``attempts > 1``, failed attempts retry
+    under bounded exponential backoff with jitter — the building block
+    ``FabricClient._reconnect`` and the registry client lean on.
     """
     kind = address[0]
-    if kind == "unix":
-        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-        sock.connect(address[1])
-    elif kind == "tcp":
-        sock = socket.create_connection((address[1], int(address[2])))
-        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-    else:
+    if kind not in ("unix", "tcp"):
         raise ValueError(f"unknown address kind {kind!r}")
-    return sock
+    delay = backoff_s
+    last: OSError | None = None
+    for attempt in range(max(1, int(attempts))):
+        if attempt:
+            time.sleep(delay * _jitter.uniform(0.5, 1.0))
+            delay = min(delay * 2.0, max_backoff_s)
+        try:
+            if kind == "unix":
+                sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+                sock.settimeout(timeout)
+                try:
+                    sock.connect(address[1])
+                except OSError:
+                    sock.close()
+                    raise
+            else:
+                sock = socket.create_connection(
+                    (address[1], int(address[2])), timeout=timeout
+                )
+            sock.settimeout(None)  # callers own their own deadlines post-connect
+            return configure_stream_socket(sock)
+        except OSError as e:
+            last = e
+    raise last if last is not None else OSError(f"connect to {address} failed")
 
 
 def listen(address) -> tuple[socket.socket, tuple]:

@@ -233,6 +233,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--writers", type=int, default=1, help="CMI save stripes (1 = bit-stable layout)")
     ap.add_argument("--ready-file", default="", help="write {pid, address} here once serving")
     ap.add_argument("--serve-only", action="store_true", help="no job loop; serve until shutdown")
+    ap.add_argument("--registry", default="",
+                    help="registry host:port — register name -> address and heartbeat")
+    ap.add_argument("--heartbeat-s", type=float, default=0.5,
+                    help="registry heartbeat interval")
     return ap
 
 
@@ -265,6 +269,24 @@ def main(argv: list[str] | None = None) -> int:
         tmp.write_text(json.dumps({"pid": os.getpid(), "address": list(server.address)}))
         os.replace(tmp, args.ready_file)
 
+    heartbeat_stop: threading.Event | None = None
+    if args.registry:
+        # announce this incarnation: name -> resolved (host, port). A respawn
+        # re-registers under a NEW generation (and usually a new ephemeral
+        # port) — that is the cache-invalidation signal drivers resolve
+        # against. Registration failure is fatal on purpose: an unreachable
+        # registry means nobody can find this worker, and a crash here is a
+        # respawn the agent knows how to retry.
+        from repro.fabric.registry import RegistryClient, tcp_address
+
+        registry = RegistryClient(tcp_address(args.registry))
+        generation = registry.register(
+            args.name, server.address, pid=os.getpid(), kind="worker"
+        )
+        heartbeat_stop = registry.start_heartbeat(
+            args.name, generation, interval_s=args.heartbeat_s
+        )
+
     run_jobs = bool(args.job_id or args.claim) and jobstore is not None
     try:
         if args.serve_only or not run_jobs:
@@ -281,6 +303,11 @@ def main(argv: list[str] | None = None) -> int:
             lease_s=args.lease_s,
         )
     finally:
+        if heartbeat_stop is not None:
+            # stop beating but keep the record: the registry (not this
+            # process) decides what the exit means — an agent's report_exit
+            # or the heartbeat gap marks it DEAD with the exit preserved
+            heartbeat_stop.set()
         server.stop()
 
 

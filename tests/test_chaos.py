@@ -129,6 +129,7 @@ def test_plan_env_round_trips_single_dict_and_list():
     "hop.before_receipt:kill_conn",  # dedup resend converges, no respawn
     "wire.send_bulk:garble",  # crc trips -> stream falls back to store
     "publish.before_commit:sigkill",  # paper Q4: torn commit never wins
+    "agent.respawn:error",  # fleet: agent retries with backoff, gen bumps
 ])
 def test_live_matrix_cell(cell_id):
     from repro.chaos import matrix
@@ -155,12 +156,13 @@ def test_matrix_covers_every_protocol_family():
 
     # every protocol family is represented in the registry and the matrix
     assert set(FAMILIES) == {"hop", "hop_stream", "relay", "fetch_stream",
-                             "publish", "lease", "wire", "proxy"}
+                             "publish", "lease", "wire", "proxy",
+                             "registry", "agent"}
     covered = {family(c["spec"]["point"]) for c in matrix.CELLS}
     assert covered == set(FAMILIES)
     assert {family(p) for p in SITES} == set(FAMILIES)
     smoke = [c for c in matrix.CELLS if c["id"] in matrix.SMOKE_IDS]
-    assert len(smoke) == len(matrix.SMOKE_IDS) <= 8  # CI-sized
+    assert len(smoke) == len(matrix.SMOKE_IDS) <= 10  # CI-sized
 
 
 def test_arm_rejects_unregistered_point():

@@ -45,14 +45,21 @@ def _alarm_guard():
 
 
 @pytest.fixture
-def fab(tmp_path):
-    """(supervisor, jobstore, store_root) with guaranteed worker cleanup."""
+def fab(tmp_path, request):
+    """(supervisor, jobstore) with guaranteed worker cleanup.
+
+    Indirect-parametrize with "unix" or "tcp" to pick the worker transport;
+    unparametrized tests use unix sockets (the fast local default)."""
+    transport = getattr(request, "param", "unix")
     jroot = tmp_path / "jobs"
-    sup = FabricSupervisor(str(tmp_path / "s3"), str(jroot))
+    sup = FabricSupervisor(str(tmp_path / "s3"), str(jroot), transport=transport)
     try:
         yield sup, JobStore(jroot)
     finally:
         sup.shutdown()
+
+
+both_transports = pytest.mark.parametrize("fab", ["unix", "tcp"], indirect=True)
 
 
 def _product_bytes(js: JobStore, job_id: str) -> bytes:
@@ -82,6 +89,78 @@ def test_wire_roundtrip_both_codecs():
 def test_wire_rejects_bad_frames():
     with pytest.raises(wire.WireError):
         wire.decode_body(b"Z", b"{}")
+
+
+def test_tcp_connect_timeout_bounds_unanswered_syn():
+    """S1 regression: without the per-attempt connect timeout, a SYN that is
+    never answered sits in the kernel's retry cycle for minutes. A listener
+    with a saturated accept backlog drops further SYNs — the local stand-in
+    for a blackholed route (this container's egress proxy answers every
+    external address, so a non-routable IP can't model it)."""
+    import socket as pysocket
+
+    srv = pysocket.socket()
+    fillers = []
+    try:
+        srv.bind(("127.0.0.1", 0))
+        srv.listen(0)
+        for _ in range(2):  # saturate the accept queue; never accept
+            f = pysocket.socket()
+            f.settimeout(0.3)
+            try:
+                f.connect(srv.getsockname())
+            except OSError:
+                pass
+            fillers.append(f)
+        t0 = time.monotonic()
+        with pytest.raises(OSError):
+            wire.connect(("tcp", "127.0.0.1", srv.getsockname()[1]), timeout=0.3)
+        assert time.monotonic() - t0 < 3.0
+    finally:
+        for f in fillers:
+            f.close()
+        srv.close()
+
+
+def test_tcp_connect_retries_are_bounded_by_backoff():
+    """attempts>1 retries under bounded exponential backoff + jitter; the
+    total walltime stays attempts*timeout + sum(backoffs), not unbounded."""
+    # a port that refuses instantly: bind-then-close frees it
+    import socket as pysocket
+
+    with pysocket.socket() as probe:
+        probe.bind(("127.0.0.1", 0))
+        dead_port = probe.getsockname()[1]
+    t0 = time.monotonic()
+    with pytest.raises(OSError):
+        wire.connect(("tcp", "127.0.0.1", dead_port),
+                     timeout=0.2, attempts=3, backoff_s=0.05)
+    assert time.monotonic() - t0 < 3.0
+
+
+def test_tcp_socket_options_on_both_client_and_server_sides(tmp_path):
+    """S2: TCP_NODELAY (latency: control frames must not Nagle-coalesce) and
+    SO_KEEPALIVE (dead-peer detection on idle fleet links) are set at socket
+    creation on the CLIENT socket and on the server's ACCEPTED socket —
+    accepted sockets do not reliably inherit listener options."""
+    import socket as pysocket
+
+    from repro.fabric.proxy import FabricClient
+    from repro.fabric.server import NodeServer
+
+    nbs = NBS(tmp_path / "s3")
+    nbs.add_node("B", mesh=None)
+    server = NodeServer(nbs, "B", ("tcp", "127.0.0.1", 0)).start()
+    try:
+        c = FabricClient(server.address)
+        assert c.request("svc/ping")["node"] == "B"  # accept happened
+        for sock, side in ((c._sock, "client"), (server._last_accepted, "server")):
+            assert sock is not None, side
+            assert sock.getsockopt(pysocket.IPPROTO_TCP, pysocket.TCP_NODELAY), side
+            assert sock.getsockopt(pysocket.SOL_SOCKET, pysocket.SO_KEEPALIVE), side
+        c.close()
+    finally:
+        server.stop()
 
 
 # ---------------------------------------------------------------------------
@@ -224,6 +303,7 @@ def _run_clean(sup: FabricSupervisor, js: JobStore) -> bytes:
     return _product_bytes(js, job.job_id)
 
 
+@both_transports
 def test_sigkill_mid_job_resumes_bit_identical(fab, tmp_path):
     """SIGKILL (no notice) mid-job; a fresh process resumes from the last
     published CMI; the product is bit-identical to an uninterrupted run."""
@@ -387,15 +467,16 @@ def test_stream_failure_falls_back_to_store_transparently(fab, tmp_path):
     assert nbs.call("W", "svc/ping")["resident"] == 1
 
 
+@both_transports
 def test_stream_midkill_falls_back_to_respawned_worker(fab, tmp_path):
     """SIGKILL the destination worker mid-stream. The sender's stream fails;
-    a replacement worker comes up at the SAME socket path (respawn-in-place);
-    the transparent store-mediated fallback reconnects and completes, and
-    the state is bit-identical."""
+    a replacement worker comes up at the SAME address (respawn-in-place —
+    a pinned unix path or a pinned tcp port); the transparent store-mediated
+    fallback reconnects and completes, and the state is bit-identical."""
     import threading
 
     sup, _ = fab
-    sock_path = os.path.join(sup.socket_dir, "W-fixed.sock")
+    sock_path = sup.pin("W")
     handle = sup.spawn("W", serve_only=True, socket_path=sock_path)
     nbs = NBS(tmp_path / "s3")
     nbs.add_node("A", mesh=None)
@@ -521,6 +602,7 @@ def _tour_cluster(sup, tmp_path, names=("B", "C", "D"), socket_paths=None):
     return nbs
 
 
+@both_transports
 def test_remote_itinerary_store_free_tour(fab, tmp_path):
     """Fig. 8 across three real worker processes: the first hop streams, the
     node-to-node moves are worker-initiated relays, the stages run inside
@@ -625,6 +707,7 @@ def test_remote_tour_relay_failure_falls_back_per_hop(fab, tmp_path):
         assert nbs.call(name, "svc/ping")["resident"] == 0
 
 
+@both_transports
 def test_remote_tour_midkill_resume_bit_identical(fab, tmp_path):
     """The tentpole acceptance: SIGKILL a worker mid-tour, respawn it in
     place, resume from the last published stage — the final product is
@@ -632,8 +715,7 @@ def test_remote_tour_midkill_resume_bit_identical(fab, tmp_path):
     from repro.core.itinerary import Itinerary
 
     sup, js = fab
-    socket_paths = {n: os.path.join(sup.socket_dir, f"{n}-fixed.sock")
-                    for n in ("B", "C", "D")}
+    socket_paths = {n: sup.pin(n) for n in ("B", "C", "D")}
     nbs = _tour_cluster(sup, tmp_path, socket_paths=socket_paths)
     x = np.random.default_rng(31).standard_normal((256, 64))
     stages = _tour_stages(publish=True)
@@ -742,3 +824,170 @@ def test_lease_expiry_steal_after_holder_sigkill(fab):
               step_ms=1, wait=False)
     assert sup.workers["rescuer"].wait(timeout=60) == EXIT_FINISHED
     assert _product_bytes(js, job.job_id) == clean
+
+
+# ---------------------------------------------------------------------------
+# multi-host fleet: registry + agent + re-resolution (the PR-8 headline)
+# ---------------------------------------------------------------------------
+
+
+def test_supervisor_adopts_agent_worker_and_reclaims_through_it(tmp_path):
+    """adopt(): the supervisor manages a worker it never forked. Signals and
+    exit codes travel over the agent's wire services, and the agent reports
+    the exit to the registry (exit codes beat heartbeat-gap inference)."""
+    from repro.fabric.agent import Agent, AgentClient
+    from repro.fabric.registry import Registry, RegistryClient, RegistryServer
+
+    registry = Registry(suspect_after_s=0.5, dead_after_s=1.5)
+    server = RegistryServer(registry).start()
+    agent = Agent(store_root=str(tmp_path / "s3"), registry_addr=server.address,
+                  worker_heartbeat_s=0.15).start()
+    sup = FabricSupervisor(str(tmp_path / "s3"), transport="tcp")
+    try:
+        reg = RegistryClient(server.address)
+        ac = AgentClient(agent.address)
+        ac.spawn("W", {"serve_only": True}, respawn=False)
+        rec = reg.wait_state("W", "alive", timeout=60)
+
+        handle = sup.adopt("W", ac, address=rec["address"], pid=rec["pid"])
+        assert handle.alive() and handle.pid == rec["pid"]
+        assert handle.pid != os.getpid()  # genuinely not ours
+
+        # reclaim-with-notice rides the agent wire: SIGTERM by *name*, the
+        # worker publishes its notice path and exits EXIT_PREEMPTED
+        rc = sup.reclaim("W", notice=True)
+        assert rc == EXIT_PREEMPTED
+        assert "W" not in sup.workers
+        # the agent watched the exit and told the registry before any gap
+        dead = reg.wait_state("W", "dead", timeout=10)
+        assert dead["exit_rc"] == EXIT_PREEMPTED
+        reg.close()
+        ac.close()
+    finally:
+        sup.shutdown()
+        agent.stop()
+        server.stop()
+
+
+def test_tcp_fleet_suspect_dead_agent_respawn_tour_resume_bit_identical(tmp_path):
+    """The ISSUE-8 headline: a 3-node Fig.-8 tour over TCP against workers an
+    *agent subprocess* spawned (the harness never forked them and reaches
+    them only through registry pid records).
+
+    * SIGSTOP freezes C's heartbeats without killing it: the registry's gap
+      monitor — not an exit report — drives ALIVE -> SUSPECT -> DEAD.
+    * SIGKILL then makes it a corpse; the agent reaps it and records the
+      exit code in the registry.
+    * The interrupted tour fails at the B->C move and leaves stage "read"
+      published; B keeps its resident copy.
+    * The agent provisions the replacement at a NEW ephemeral port; the
+      registry bumps the generation; the driver's proxies re-resolve through
+      node_resolver with no manual re-wiring.
+    * Itinerary.resume completes to a bit-identical product, the hop
+      namespace is clean, and no lease is left stranded.
+    """
+    import subprocess
+    import sys
+
+    from repro.core.itinerary import Itinerary
+    from repro.fabric.agent import AgentClient, _src_dir
+    from repro.fabric.registry import (
+        Registry,
+        RegistryClient,
+        RegistryServer,
+        node_resolver,
+    )
+
+    events = []
+    registry = Registry(
+        suspect_after_s=0.5, dead_after_s=1.5,
+        on_state_change=lambda name, old, new, rec: events.append((name, old, new)),
+    )
+    server = RegistryServer(registry).start()
+    reg_spec = f"{server.address[1]}:{server.address[2]}"
+    js = JobStore(tmp_path / "jobs")
+    agent_proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.fabric.agent",
+         "--registry", reg_spec, "--store", str(tmp_path / "s3"),
+         "--jobstore", str(tmp_path / "jobs"),
+         "--name", "agent0", "--worker-heartbeat-s", "0.15"],
+        env={**os.environ, "PYTHONPATH": _src_dir(), "JAX_PLATFORMS": "cpu"},
+    )
+    reg = RegistryClient(server.address)
+    try:
+        agent_rec = reg.wait_state("agent0", "alive", timeout=60)
+        agent = AgentClient(agent_rec["address"])
+        names = ("B", "C", "D")
+        for name in names:
+            agent.spawn(name, {"serve_only": True}, respawn=False)
+        recs = {n: reg.wait_state(n, "alive", timeout=120) for n in names}
+
+        nbs = NBS(tmp_path / "s3")
+        nbs.add_node("A", mesh=None)
+        for name in names:
+            # resolver: the proxy re-resolves by NAME through the registry
+            nbs.add_remote_node(name, recs[name]["address"],
+                                resolver=node_resolver(reg, name))
+        stages = _tour_stages(publish=True)
+        x = np.random.default_rng(41).standard_normal((256, 64))
+
+        job_clean = js.create_job({})
+        out_clean = Itinerary(DHP(nbs, "A", js, chunk_bytes=1 << 14),
+                              job_clean.job_id).run({"x": x.copy()}, stages)
+
+        # -- failure detection is the registry's, not the harness's --------
+        # SIGSTOP: the process lives (the agent keeps seeing it "running",
+        # so no exit report) but its heartbeats stop — only the gap monitor
+        # can conclude anything, and it must walk SUSPECT before DEAD
+        os.kill(recs["C"]["pid"], signal.SIGSTOP)
+        reg.wait_state("C", "suspect", timeout=15)
+        reg.wait_state("C", "dead", timeout=15)
+        assert ("C", "alive", "suspect") in events
+        assert ("C", "suspect", "dead") in events
+        # now make it a corpse; the agent reaps the child and files the rc
+        os.kill(recs["C"]["pid"], signal.SIGKILL)
+        deadline = time.monotonic() + 30
+        while reg.resolve("C").get("exit_rc") != -signal.SIGKILL:
+            assert time.monotonic() < deadline, "agent never reported the exit"
+            time.sleep(0.05)
+
+        # -- the interrupted tour ------------------------------------------
+        job = js.create_job({})
+        nbs.node("C").client.reconnect_timeout_s = 2.0  # fail fast, not 10s
+        with pytest.raises(OSError):
+            Itinerary(DHP(nbs, "A", js, chunk_bytes=1 << 14),
+                      job.job_id).run({"x": x.copy()}, stages)
+        j = js.read_job(job.job_id)
+        assert j.status == STATUS_CKPT  # stage "read" committed before the kill
+        assert nbs.call("B", "svc/ping")["resident"] >= 1  # holder kept its copy
+
+        # -- agent-provisioned replacement + registry re-resolution --------
+        agent.spawn("C", {"serve_only": True}, respawn=False)
+        rec2 = reg.wait_state("C", "alive", timeout=120)
+        assert rec2["generation"] > recs["C"]["generation"]
+        assert tuple(rec2["address"]) != tuple(recs["C"]["address"])  # new port
+        assert rec2["pid"] != recs["C"]["pid"]
+        # the driver's next call re-resolves transparently: same proxy, no
+        # manual re-wiring, answered by the NEW incarnation
+        assert nbs.call("C", "svc/ping")["pid"] == rec2["pid"]
+
+        it2 = Itinerary(DHP(nbs, "A", js, chunk_bytes=1 << 14), job.job_id)
+        out2 = it2.resume(stages)
+        assert [n for n, _ in it2.trace] == ["compute", "write"]
+        assert np.asarray(out2["x"]).tobytes() == np.asarray(out_clean["x"]).tobytes()
+        assert out2["toured"] == 1
+        assert list(nbs.hop_root.iterdir()) == []  # clean hop_root
+        assert not js.read_job(job.job_id).leased()  # no stranded lease
+
+        agent.shutdown()
+        agent.close()
+        agent_proc.wait(timeout=30)
+    finally:
+        if agent_proc.poll() is None:
+            agent_proc.kill()
+            try:
+                agent_proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                pass
+        reg.close()
+        server.stop()

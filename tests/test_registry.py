@@ -1,0 +1,283 @@
+"""Registry unit tests: the heartbeat-gap state machine, generations, and
+name re-resolution — all in-process (no worker subprocesses), so they run
+at tier-1 speed. The process-level fleet story (agent subprocess, SIGKILL,
+respawn) lives in tests/test_fabric.py and the chaos matrix's fleet cells.
+"""
+
+import os
+import signal
+import time
+
+import pytest
+
+from repro.fabric import wire
+from repro.fabric.registry import (
+    ALIVE,
+    DEAD,
+    SUSPECT,
+    Registry,
+    RegistryClient,
+    RegistryServer,
+    node_resolver,
+    tcp_address,
+)
+
+PER_TEST_TIMEOUT_S = int(os.environ.get("NAVP_TEST_TIMEOUT", "180"))
+
+
+@pytest.fixture(autouse=True)
+def _alarm_guard():
+    def on_alarm(signum, frame):
+        raise TimeoutError(f"registry test exceeded {PER_TEST_TIMEOUT_S}s")
+
+    old = signal.signal(signal.SIGALRM, on_alarm)
+    signal.alarm(PER_TEST_TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+# ---------------------------------------------------------------------------
+# the state machine (no transport, manual sweeps with injected clocks)
+# ---------------------------------------------------------------------------
+
+
+def test_tcp_address_parses_specs():
+    assert tcp_address("127.0.0.1:7000") == ("tcp", "127.0.0.1", 7000)
+    assert tcp_address(":7000") == ("tcp", "127.0.0.1", 7000)
+    assert tcp_address("host.example:0") == ("tcp", "host.example", 0)
+
+
+def test_gap_drives_alive_suspect_dead_with_callbacks():
+    events = []
+    reg = Registry(suspect_after_s=1.0, dead_after_s=3.0,
+                   on_state_change=lambda n, o, s, r: events.append((n, o, s)))
+    reg.register("W", ("tcp", "127.0.0.1", 7001), pid=123)
+    t0 = reg.resolve("W").last_heartbeat
+
+    reg.sweep(now=t0 + 0.5)
+    assert reg.resolve("W").state == ALIVE
+    reg.sweep(now=t0 + 1.5)
+    assert reg.resolve("W").state == SUSPECT
+    reg.sweep(now=t0 + 2.5)  # suspect is not dead yet
+    assert reg.resolve("W").state == SUSPECT
+    reg.sweep(now=t0 + 3.5)
+    assert reg.resolve("W").state == DEAD
+    assert events == [("W", ALIVE, SUSPECT), ("W", SUSPECT, DEAD)]
+
+    # a sign of life resurrects the record (slow != gone)
+    assert reg.heartbeat("W") == ALIVE
+    assert events[-1] == ("W", DEAD, ALIVE)
+
+
+def test_one_sweep_walks_straight_to_dead_after_a_long_gap():
+    """A monitor that was itself stalled (driver paused, clock jump) must
+    not leave a long-gapped node parked in SUSPECT."""
+    reg = Registry(suspect_after_s=1.0, dead_after_s=3.0)
+    reg.register("W", ("tcp", "127.0.0.1", 7001))
+    t0 = reg.resolve("W").last_heartbeat
+    reg.sweep(now=t0 + 10.0)
+    assert reg.resolve("W").state == DEAD
+
+
+def test_reregistration_bumps_generation_and_replaces_address():
+    events = []
+    reg = Registry(on_state_change=lambda n, o, s, r: events.append((n, o, s)))
+    g1 = reg.register("W", ("tcp", "127.0.0.1", 7001), pid=1)
+    reg.report_exit("W", rc=-9)
+    assert reg.resolve("W").state == DEAD
+    assert reg.resolve("W").exit_rc == -9
+
+    g2 = reg.register("W", ("tcp", "127.0.0.1", 7002), pid=2)
+    rec = reg.resolve("W")
+    assert g2 == g1 + 1 == rec.generation
+    assert rec.address == ("tcp", "127.0.0.1", 7002) and rec.pid == 2
+    assert rec.state == ALIVE and rec.exit_rc is None
+    assert ("W", DEAD, ALIVE) in events  # respawn announced itself
+
+
+def test_stale_generation_heartbeat_cannot_keep_the_record_alive():
+    """A zombie predecessor outliving its replacement must not mask the new
+    incarnation's death: its beats are answered "stale" and ignored."""
+    reg = Registry(suspect_after_s=1.0, dead_after_s=3.0)
+    g1 = reg.register("W", ("tcp", "127.0.0.1", 7001))
+    g2 = reg.register("W", ("tcp", "127.0.0.1", 7002))
+    t0 = reg.resolve("W").last_heartbeat
+
+    assert reg.heartbeat("W", generation=g1) == "stale"
+    reg.sweep(now=t0 + 1.5)
+    assert reg.resolve("W").state == SUSPECT  # the zombie beat didn't refresh
+    assert reg.heartbeat("W", generation=g2) == ALIVE
+    assert reg.heartbeat("ghost") == "unknown"
+
+
+def test_report_exit_beats_gap_inference():
+    """An agent-observed exit marks DEAD immediately — no SUSPECT detour,
+    no waiting out the heartbeat timeout."""
+    events = []
+    reg = Registry(on_state_change=lambda n, o, s, r: events.append((n, o, s)))
+    reg.register("W", ("tcp", "127.0.0.1", 7001))
+    reg.report_exit("W", rc=-signal.SIGKILL)
+    rec = reg.resolve("W")
+    assert rec.state == DEAD and rec.exit_rc == -signal.SIGKILL
+    assert events == [("W", ALIVE, DEAD)]
+    reg.report_exit("ghost", rc=1)  # unknown names are a no-op, not a crash
+
+
+# ---------------------------------------------------------------------------
+# the wire service + re-resolution
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def served():
+    registry = Registry(suspect_after_s=0.5, dead_after_s=1.5)
+    server = RegistryServer(registry).start()
+    client = RegistryClient(server.address)
+    try:
+        yield registry, server, client
+    finally:
+        client.close()
+        server.stop()
+
+
+def test_registry_server_round_trip(served):
+    registry, server, reg = served
+    g = reg.register("W", ("tcp", "127.0.0.1", 7001), pid=42, kind="worker",
+                     meta={"host": "h1"})
+    assert g == 1
+    rec = reg.resolve("W")
+    assert rec["address"] == ("tcp", "127.0.0.1", 7001)  # tuple-normalized
+    assert rec["pid"] == 42 and rec["meta"] == {"host": "h1"}
+    assert reg.heartbeat("W", generation=g) == ALIVE
+    assert [r["name"] for r in reg.list_nodes()] == ["W"]
+    reg.report_exit("W", rc=-9)
+    assert reg.resolve("W")["state"] == DEAD
+    reg.deregister("W")
+    with pytest.raises(wire.RemoteError, match="unknown node"):
+        reg.resolve("W")
+
+
+def test_wait_state_times_out_with_last_seen_state(served):
+    _, _, reg = served
+    reg.register("W", ("tcp", "127.0.0.1", 7001))
+    with pytest.raises(TimeoutError, match="alive"):
+        reg.wait_state("W", "dead", timeout=0.3)
+
+
+def test_monitor_thread_suspects_then_revives_on_heartbeat(served):
+    """The RegistryServer's own monitor (not a manual sweep) drives the
+    transitions off the wall clock; a late heartbeat revives the record."""
+    _, _, reg = served
+    g = reg.register("W", ("tcp", "127.0.0.1", 7001))
+    reg.wait_state("W", SUSPECT, timeout=10)
+    assert reg.heartbeat("W", generation=g) == ALIVE
+    assert reg.resolve("W")["state"] == ALIVE
+    reg.wait_state("W", DEAD, timeout=10)  # and with no more beats: dead
+
+
+def test_node_resolver_tracks_reregistration_and_degrades_to_none(served):
+    _, _, reg = served
+    resolve = node_resolver(reg, "W")
+    assert resolve() is None  # unknown name: caller keeps its cached address
+    reg.register("W", ("tcp", "127.0.0.1", 7001))
+    assert resolve() == ("tcp", "127.0.0.1", 7001)
+    reg.register("W", ("tcp", "127.0.0.1", 7002))  # respawn moved it
+    assert resolve() == ("tcp", "127.0.0.1", 7002)
+
+
+def test_fabric_client_reresolves_respawned_server_through_registry(served, tmp_path):
+    """The cache-invalidation story end to end, in-process: a FabricClient
+    whose server died reconnects through node_resolver to the SAME name at a
+    NEW port — the respawned incarnation answers, nobody retries the corpse."""
+    from repro.core import NBS
+    from repro.fabric.proxy import FabricClient
+    from repro.fabric.server import NodeServer
+
+    _, _, reg = served
+    nbs = NBS(tmp_path / "s3")
+    nbs.add_node("W", mesh=None)
+    s1 = NodeServer(nbs, "W", ("tcp", "127.0.0.1", 0)).start()
+    reg.register("W", s1.address, pid=os.getpid())
+    client = FabricClient(s1.address, reconnect_timeout_s=10.0,
+                          resolver=node_resolver(reg, "W"))
+    try:
+        assert client.request("svc/ping")["node"] == "W"
+        s1.stop()  # no new connections to the old incarnation...
+        client._sock.close()  # ...and the established one dies with it
+
+        s2 = NodeServer(nbs, "W", ("tcp", "127.0.0.1", 0)).start()
+        try:
+            assert s2.address != s1.address  # genuinely a new port
+            reg.register("W", s2.address, pid=os.getpid())
+            # same proxy object: reconnect consults the resolver and lands
+            # on the new address
+            assert client.request("svc/ping")["node"] == "W"
+            assert client.address == s2.address
+        finally:
+            s2.stop()
+    finally:
+        client.close()
+
+
+def test_service_client_resends_after_connection_loss(served):
+    """ServiceClient's blind reconnect-resend: a dropped connection between
+    requests is invisible to the caller (every reg/* service is idempotent)."""
+    _, _, reg = served
+    reg.register("W", ("tcp", "127.0.0.1", 7001))
+    assert reg.resolve("W")["name"] == "W"
+    reg._sock.close()  # sever the link behind the client's back
+    assert reg.resolve("W")["name"] == "W"  # reconnect + resend, same answer
+
+
+def test_dead_callback_releases_only_the_dead_workers_leases(tmp_path):
+    """The DEAD transition is where supervisors hang lease policy: wired to
+    JobStore.release_worker_leases, a confirmed-dead node's jobs become
+    claimable immediately — no waiting out the remaining lease window — and
+    other workers' live leases are untouched."""
+    from repro.core.jobstore import JobStore
+
+    js = JobStore(tmp_path / "jobs")
+    j1 = js.create_job({"seed": 1})
+    j2 = js.create_job({"seed": 2})
+    assert js.svc_get_job(j1.job_id, worker="W", lease_s=3600).lease_owner == "W"
+    assert js.svc_get_job(j2.job_id, worker="bystander", lease_s=3600) is not None
+
+    released = []
+    reg = Registry(
+        suspect_after_s=0.5, dead_after_s=1.5,
+        on_state_change=lambda name, old, new, rec: (
+            released.extend(js.release_worker_leases(name)) if new == DEAD else None
+        ),
+    )
+    reg.register("W", ("tcp", "127.0.0.1", 7001))
+    t0 = reg.resolve("W").last_heartbeat
+    reg.sweep(now=t0 + 10.0)  # long-gapped: straight to DEAD
+
+    assert released == [j1.job_id]
+    assert not js.read_job(j1.job_id).leased()
+    assert js.read_job(j2.job_id).lease_owner == "bystander"  # untouched
+    # a polite rival claims W's job NOW — the 3600s lease term is irrelevant
+    stolen = js.svc_get_job(j1.job_id, worker="rival", steal=False)
+    assert stolen is not None and stolen.lease_owner == "rival"
+
+
+def test_heartbeat_loop_stops_when_superseded(served):
+    """A start_heartbeat loop whose generation was superseded must stop
+    beating (it is the zombie); the new generation's beats keep flowing."""
+    _, _, reg = served
+    g1 = reg.register("W", ("tcp", "127.0.0.1", 7001))
+    stop = reg.start_heartbeat("W", g1, interval_s=0.05)
+    try:
+        g2 = reg.register("W", ("tcp", "127.0.0.1", 7002))  # supersede gen 1
+        deadline = time.monotonic() + 5
+        # with only the stale loop beating, the record must decay to SUSPECT:
+        # proof the zombie's beats are being ignored AND its loop exits
+        while reg.resolve("W")["state"] == ALIVE:
+            assert time.monotonic() < deadline, "stale beats kept the record alive"
+            time.sleep(0.05)
+        assert reg.heartbeat("W", generation=g2) == ALIVE
+    finally:
+        stop.set()
