@@ -196,6 +196,93 @@ def writer_sweep(
     return rows, results
 
 
+def mutate_all_arrays(state, frac=0.25, seed=2):
+    """Mutate a leading ``frac`` of rows of every array: with row-aligned
+    chunks this changes exactly ``frac`` of every array's chunk grid."""
+    rng = np.random.default_rng(seed)
+    out = jax.tree_util.tree_map(lambda x: x, state)
+    for group in ("params", "opt"):
+        for key, arr in out[group].items():
+            w = np.asarray(arr).copy()
+            k = max(1, int(w.shape[0] * frac))
+            w[:k] = rng.standard_normal((k, w.shape[1])).astype(w.dtype)
+            out[group][key] = w
+    return out
+
+
+def cas_publish_bench(
+    n_mb: int = 64,
+    chunk_mb: int = 1,
+    changed_frac: float = 0.25,
+    repeats: int = 1,
+) -> tuple[list[tuple[str, float, str]], dict]:
+    """publish_full vs publish_cas_delta (25 % chunks changed), interleaved.
+
+    The CAS store makes the digest the chunk identity, so a successive
+    tour-stage publish writes only the objects the store does not hold —
+    O(changed) bytes instead of O(state). Reports the delta byte ratio
+    (the acceptance bar is <= 0.35 at changed_frac=0.25) and the dedupe
+    ratio of an identical re-save (must be 1.0: zero new objects).
+    """
+    state = jax.tree_util.tree_map(
+        lambda x: np.asarray(x) if hasattr(x, "shape") else x, make_state(n_mb)
+    )
+    state2 = mutate_all_arrays(state, changed_frac)
+    nbytes = tree_nbytes(state)
+    best = {"full": float("inf"), "delta": float("inf"), "resave": float("inf")}
+    full_bytes = delta_bytes = dedup_chunks = total_chunks = 0
+    for _ in range(max(1, repeats)):
+        root = tempfile.mkdtemp(prefix="bench-cas-")
+        try:
+            opts = SaveOptions(chunk_bytes=chunk_mb * MB, cas=True)
+            t0 = time.perf_counter()
+            m_full = save_checkpoint(root, "stage-0", state, options=opts)
+            best["full"] = min(best["full"], time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            m_delta = save_checkpoint(
+                root, "stage-1", state2,
+                options=SaveOptions(chunk_bytes=chunk_mb * MB, cas=True,
+                                    parent="stage-0"),
+            )
+            best["delta"] = min(best["delta"], time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            m_re = save_checkpoint(root, "stage-1-re", state2,
+                                   options=SaveOptions(chunk_bytes=chunk_mb * MB,
+                                                       cas=True, parent="stage-0"))
+            best["resave"] = min(best["resave"], time.perf_counter() - t0)
+            full_bytes = m_full.extra["stats"]["written_bytes"]
+            delta_bytes = m_delta.extra["stats"]["written_bytes"]
+            total_chunks = m_re.extra["stats"]["chunks"]
+            dedup_chunks = total_chunks - (
+                m_re.extra["stats"]["objects_written"])
+            assert m_re.extra["stats"]["written_bytes"] == 0, (
+                "identical re-save wrote bytes: store dedup broken")
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+    ratio = delta_bytes / max(1, full_bytes)
+    results = {
+        "state_bytes": nbytes,
+        "chunk_bytes": chunk_mb * MB,
+        "changed_frac": changed_frac,
+        "publish_full": {"s": best["full"], "written_bytes": full_bytes,
+                         "gbps": nbytes / best["full"] / 1e9},
+        "publish_cas_delta": {"s": best["delta"], "written_bytes": delta_bytes,
+                              "ratio_vs_full": ratio},
+        "resave_dedup": {"s": best["resave"],
+                         "dedup_ratio": dedup_chunks / max(1, total_chunks)},
+    }
+    rows = [
+        ("ckpt_publish_full", best["full"] * 1e6,
+         f"wrote {full_bytes/MB:.1f}MB cas {nbytes/best['full']/1e9:.2f}GB/s"),
+        ("ckpt_publish_cas_delta", best["delta"] * 1e6,
+         f"wrote {delta_bytes/MB:.1f}MB ({ratio:.0%} of full, "
+         f"{changed_frac:.0%} chunks changed)"),
+        ("ckpt_publish_cas_resave", best["resave"] * 1e6,
+         f"dedup ratio {results['resave_dedup']['dedup_ratio']:.2f} (0 bytes)"),
+    ]
+    return rows, results
+
+
 def main(argv: list[str] | None = None) -> None:
     import argparse
 
@@ -208,7 +295,27 @@ def main(argv: list[str] | None = None) -> None:
     )
     ap.add_argument("--repeats", type=int, default=2, help="best-of-N timing")
     ap.add_argument("--out", default=None, help="write JSON results here")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="small CAS-only run asserting the delta-bytes acceptance bar "
+             "(25%% chunks changed -> <= 35%% of full-publish bytes)",
+    )
     args = ap.parse_args(argv)
+
+    if args.smoke:
+        # 32 MB -> 8 chunks per array at 1 MiB: a 25 % row mutation lands on
+        # exactly 25 % of the chunk grid (smaller states round 25 % of rows
+        # up to a larger chunk fraction).
+        cas_rows, cas = cas_publish_bench(n_mb=32, chunk_mb=1, repeats=1)
+        for name, us, note in cas_rows:
+            print(f"{name:<28} {us/1e3:>9.1f}ms  {note}")
+        ratio = cas["publish_cas_delta"]["ratio_vs_full"]
+        assert ratio <= 0.35, (
+            f"CAS delta wrote {ratio:.0%} of full-publish bytes "
+            "(acceptance bar: <= 35% at 25% chunks changed)")
+        assert cas["resave_dedup"]["dedup_ratio"] == 1.0
+        print(f"smoke OK: delta ratio {ratio:.0%} <= 35%, resave dedup 1.0")
+        return
 
     rows, results = writer_sweep(
         args.sweep_mb, args.chunk_mb, args.writers, repeats=args.repeats
@@ -219,6 +326,11 @@ def main(argv: list[str] | None = None) -> None:
             f"{label:>10} {r['save_gbps']:>10.3f} {r['restore_gbps']:>13.3f} "
             f"{r.get('save_speedup_vs_w1', 1.0):>7.2f} {r.get('restore_speedup_vs_w1', 1.0):>10.2f}"
         )
+    cas_rows, results["cas"] = cas_publish_bench(
+        n_mb=min(64, args.sweep_mb), chunk_mb=args.chunk_mb, repeats=args.repeats
+    )
+    for name, us, note in cas_rows:
+        print(f"{name:<28} {us/1e3:>9.1f}ms  {note}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1, sort_keys=True)

@@ -97,6 +97,7 @@ def bench(
     sup = None
     times: dict[str, list[float]] = {"hop_live": [], "hop_store": []}
     stream_stats: dict = {}
+    comp_stats: dict = {}
     stream_fallbacks = 0
     tour_fallbacks = 0
     try:
@@ -117,6 +118,8 @@ def bench(
                 times["hop_xproc"] = []
                 times["hop_stream"] = []
                 times["hop_stream_delta"] = []
+                times["hop_stream_zstd"] = []
+                times["hop_stream_raw"] = []
                 # two more workers for the 3-node remote tour
                 for wname in ("W2", "W3"):
                     nbs.add_remote_node(wname, sup.spawn(wname, serve_only=True).address)
@@ -194,6 +197,51 @@ def bench(
                 wnode._stream_baseline = None  # next round streams full
                 del state, state2
 
+            if "hop_stream_zstd" in times:
+                # compressed vs raw wire on compressible-but-unique state
+                # (small-int floats: every chunk distinct, high redundancy —
+                # dedup can't shortcut it, only the codec can). The config
+                # name says zstd; the ladder negotiates the best codec both
+                # ends speak (zstd > lz4 > zlib stdlib floor).
+                from repro.fabric import wire as fabwire
+
+                comp_np = rng.integers(0, 8, (n, 256)).astype(np.float32)
+                wnode = nbs.node("W")
+                # explicit opt-in: the sender only offers fast codecs by
+                # default, so name the best codec this build can speak
+                # (receivers always answer with their full speakable set)
+                best = (fabwire.speakable_codecs() or ("zlib",))[0]
+                for cfg, env in (("hop_stream_zstd", best), ("hop_stream_raw", "off")):
+                    old_env = os.environ.pop(fabwire.COMPRESSION_ENV, None)
+                    if env is not None:
+                        os.environ[fabwire.COMPRESSION_ENV] = env
+                    try:
+                        dhp = DHP(nbs, "A", chunk_bytes=chunk_bytes)
+                        state = {"x": jnp.asarray(comp_np)}
+                        t0 = time.perf_counter()
+                        ref = dhp.hop(state, "W", via="auto")
+                        dt = time.perf_counter() - t0
+                        if ref.via == "stream":
+                            times[cfg].append(dt)
+                            receipt = wnode.last_stream_receipt or {}
+                            comp_stats[cfg] = {
+                                "sent_bytes": receipt.get("sent_bytes"),
+                                "chunks": receipt.get("chunks"),
+                            }
+                        elif strict_stream:
+                            raise RuntimeError(f"{cfg} hop fell back: {ref}")
+                        else:
+                            stream_fallbacks += 1
+                        nbs.call("W", "svc/drop", token=ref.token)
+                        wnode._stream_baseline = None
+                        del state
+                    finally:
+                        if old_env is not None:
+                            os.environ[fabwire.COMPRESSION_ENV] = old_env
+                        else:
+                            os.environ.pop(fabwire.COMPRESSION_ENV, None)
+                comp_stats["codec"] = best
+
             if "tour_stream" in times:
                 # the 3-stage remote itinerary, stream-chained vs store-chained
                 # on the SAME input (bit-identical products double as a check)
@@ -247,7 +295,7 @@ def bench(
     t_live = statistics.median(times["hop_live"])
     rows = [("hop_live", t_live * 1e6, f"{nbytes/t_live/1e9:.2f}GB/s")]
     for key in ("hop_store", "hop_xproc", "hop_stream", "hop_stream_delta",
-                "tour_stream", "tour_store"):
+                "hop_stream_zstd", "hop_stream_raw", "tour_stream", "tour_store"):
         if key not in times or not times[key]:
             continue
         t = statistics.median(times[key])
@@ -275,12 +323,21 @@ def bench(
             ratios["stream_over_delta"] = (
                 cfg["hop_stream"]["median_s"] / cfg["hop_stream_delta"]["median_s"]
             )
+    if "hop_stream_zstd" in cfg and "hop_stream_raw" in cfg:
+        ratios["raw_over_compressed_time"] = (
+            cfg["hop_stream_raw"]["median_s"] / cfg["hop_stream_zstd"]["median_s"]
+        )
+        zb = (comp_stats.get("hop_stream_zstd") or {}).get("sent_bytes")
+        rb = (comp_stats.get("hop_stream_raw") or {}).get("sent_bytes")
+        if zb and rb:
+            ratios["compressed_over_raw_bytes"] = zb / rb
     if "tour_stream" in cfg and "tour_store" in cfg:
         ratios["tour_store_over_stream"] = (
             cfg["tour_store"]["median_s"] / cfg["tour_stream"]["median_s"]
         )
     results["ratios"] = ratios
     results["stream"] = stream_stats
+    results["compression"] = comp_stats
     return rows, results
 
 
@@ -321,7 +378,8 @@ def main(argv: list[str] | None = None) -> None:
     if args.smoke:
         # the smoke contract: stream, delta, and the stream-chained remote
         # tour all ran end to end without ever falling back to the store
-        for need in ("hop_stream", "hop_stream_delta", "tour_stream", "tour_store"):
+        for need in ("hop_stream", "hop_stream_delta", "hop_stream_zstd",
+                     "hop_stream_raw", "tour_stream", "tour_store"):
             if need not in results["configs"]:
                 raise SystemExit(f"smoke: {need} did not run")
         print("smoke ok: stream, delta, and tour transports ran without fallback")

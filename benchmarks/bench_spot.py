@@ -288,6 +288,12 @@ def main(argv: list[str] | None = None) -> int:
         help="small sweep: regression-checks the simulator + the "
         "adaptive>=fixed invariant without taking CI minutes",
     )
+    ap.add_argument(
+        "--cas-publish-cost-s", type=float, default=None,
+        help="rerun the sweep at this cheaper publish cost (the CAS delta "
+        "store's O(changed) publish) and record how the adaptive policy "
+        "tightens its cadence",
+    )
     ap.add_argument("--out", default=None, help="write JSON results here")
     args = ap.parse_args(argv)
     if args.smoke:
@@ -297,6 +303,33 @@ def main(argv: list[str] | None = None) -> int:
         work_steps=args.steps, trials=args.trials,
         publish_cost_s=args.publish_cost_s, restart_s=args.restart_s,
     )
+    if args.cas_publish_cost_s is not None:
+        # same sweep, cheaper C: a content-addressed delta publish writes
+        # only changed objects, so the adaptive policy's cost/benefit balance
+        # shifts toward publishing more often (tighter cadence, less rework)
+        _, cheap = bench(
+            work_steps=args.steps, trials=args.trials,
+            publish_cost_s=args.cas_publish_cost_s, restart_s=args.restart_s,
+        )
+        results["cas_delta_rerun"] = {
+            "publish_cost_s": args.cas_publish_cost_s,
+            "policies": cheap["policies"],
+            "adaptive_wins": cheap["adaptive_wins"],
+            "cadence_tightening": {
+                t: {
+                    "publishes_full_c": results["policies"]["adaptive"][t]["publishes"],
+                    "publishes_cas_c": cheap["policies"]["adaptive"][t]["publishes"],
+                    "goodput_full_c": results["policies"]["adaptive"][t]["goodput"],
+                    "goodput_cas_c": cheap["policies"]["adaptive"][t]["goodput"],
+                }
+                for t in cheap["policies"]["adaptive"]
+            },
+        }
+        print(f"cas rerun (C={args.cas_publish_cost_s}s):")
+        for t, row in results["cas_delta_rerun"]["cadence_tightening"].items():
+            print(f"  {t}: publishes {row['publishes_full_c']:.0f} -> "
+                  f"{row['publishes_cas_c']:.0f}, goodput "
+                  f"{row['goodput_full_c']:.3f} -> {row['goodput_cas_c']:.3f}")
     print(f"{'trace/policy':>24} {'goodput':>8} {'wasted%':>8} {'publishes':>10} {'reclaims':>9}")
     for pname, per_trace in results["policies"].items():
         for tname, agg in per_trace.items():

@@ -26,11 +26,12 @@ from typing import Iterable, Mapping
 
 from repro.analysis.rules import Finding
 
-# a docs table row:  | `hop.after_save` | ... |
-_DOC_POINT_RE = re.compile(r"^\|\s*`([a-z_]+\.[a-z_]+)`\s*\|", re.MULTILINE)
+# a docs table row:  | `hop.after_save` | ... |  (states may be dotted too:
+# `cas.publish.pre_link`)
+_DOC_POINT_RE = re.compile(r"^\|\s*`([a-z_]+(?:\.[a-z_]+)+)`\s*\|", re.MULTILINE)
 
 # dotted "family.state" strings are fire points; single tokens are ad-hoc
-_POINT_RE = re.compile(r"^[a-z_]+\.[a-z_]+$")
+_POINT_RE = re.compile(r"^[a-z_]+(?:\.[a-z_]+)+$")
 
 
 def _iter_py(paths: Iterable[Path]):

@@ -9,7 +9,9 @@ invariants after recovery:
 * the final product is **bit-identical** to an uninterrupted run,
 * the store's hop namespace is empty (no leaked transit CMIs),
 * no torn CMI staging directories survive,
-* no job is left holding a stranded lease.
+* no job is left holding a stranded lease,
+* the content-addressed object store passes ``fsck`` (no torn objects, no
+  dangling manifest refs — orphans are the only allowed kill residue).
 
 Two scenarios carry the cells:
 
@@ -151,6 +153,25 @@ CELLS: list[dict] = [
      "spec": {"point": "agent.spawn", "action": "error", "role": "agent"}},
     {"id": "agent.respawn:error", "scenario": "fleet",
      "spec": {"point": "agent.respawn", "action": "error", "role": "agent"}},
+    # -- cas (content-addressed object store, manifest v4) -----------------
+    # after=2: the third object write of the run — a kill MID-multi-object
+    # publish (some objects linked, one still a tmp file)
+    {"id": "cas.publish.pre_link:sigkill", "scenario": "job",
+     "spec": {"point": "cas.publish.pre_link", "action": "sigkill", "role": "worker",
+              "after": 2}},
+    # after=1: the SECOND publish dies with all its objects durable but its
+    # manifest never committed — pure orphans, previous publish authoritative
+    {"id": "cas.publish.post_objects:sigkill", "scenario": "job",
+     "spec": {"point": "cas.publish.post_objects", "action": "sigkill", "role": "worker",
+              "after": 1}},
+    {"id": "cas.gc.mid_sweep:sigkill", "scenario": "job",
+     "spec": {"point": "cas.gc.mid_sweep", "action": "sigkill", "role": "worker"}},
+    # -- wire, continued: compressed bulk payloads -------------------------
+    # compressible input so frames actually carry a codec marker; the garble
+    # lands in the driver's fetch-back decompress and must surface as frame
+    # corruption -> clean store fallback, never a codec exception
+    {"id": "wire.bulk.decompress:garble", "scenario": "tour", "input": "compressible",
+     "spec": {"point": "wire.bulk.decompress", "action": "garble", "role": "driver"}},
 ]
 
 def cell_registry() -> list[dict]:
@@ -196,6 +217,7 @@ SMOKE_IDS = [
     "lease.before_renew:sigkill",
     "registry.resolve:error",
     "agent.respawn:error",
+    "cas.publish.pre_link:sigkill",
 ]
 
 
@@ -245,9 +267,23 @@ def _attempt_tour(sup: FabricSupervisor, store_root: Path, x: np.ndarray):
 
 def run_tour_cell(cell: dict, tmp: Path, transport: str = "unix") -> None:
     store_root = tmp / "s3"
+    old_comp = None
+    if cell.get("input") == "compressible":
+        # force a codec every build speaks (the default ladder only offers
+        # zstd/lz4 when their packages import); driver and workers spawned
+        # below inherit it, so negotiation yields a real codec
+        from repro.fabric.wire import COMPRESSION_ENV
+
+        old_comp = os.environ.get(COMPRESSION_ENV)
+        os.environ[COMPRESSION_ENV] = "zlib"
     sup = FabricSupervisor(str(store_root), transport=transport)
     socket_paths = {n: sup.pin(n) for n in _TOUR_NODES}
     x = np.random.default_rng(77).standard_normal((256, 64))
+    if cell.get("input") == "compressible":
+        # wire compression only engages when a chunk actually shrinks: tile
+        # one row so every streamed chunk is highly redundant and the bulk
+        # frames carry a real codec marker for the fault to strike
+        x = np.tile(x[:1], (256, 1))
     expected = _tour_expected(x)
     try:
         last: Exception | None = None
@@ -283,6 +319,13 @@ def run_tour_cell(cell: dict, tmp: Path, transport: str = "unix") -> None:
             raise AssertionError(f"hop namespace leaked transit CMIs: {leaked}")
     finally:
         sup.shutdown()
+        if cell.get("input") == "compressible":
+            from repro.fabric.wire import COMPRESSION_ENV
+
+            if old_comp is None:
+                os.environ.pop(COMPRESSION_ENV, None)
+            else:
+                os.environ[COMPRESSION_ENV] = old_comp
 
 
 # ---------------------------------------------------------------------------
@@ -367,6 +410,16 @@ def run_job_cell(cell: dict, tmp: Path, transport: str = "unix") -> None:
                 if ".stage-" in p.name]
         if torn:
             raise AssertionError(f"torn CMI staging dirs survived: {torn}")
+        # CAS durability contract: whatever the kill left behind, the store
+        # must pass fsck — no torn objects, no dangling manifest refs
+        # (orphaned objects/tmp files are the allowed benign residue)
+        from repro.checkpoint.fsck import fsck_store
+
+        report = fsck_store(js.cmi_root(job.job_id))
+        if not report.clean:
+            raise AssertionError(
+                f"store failed fsck after recovery: {report.errors}"
+            )
     finally:
         sup.shutdown()
 

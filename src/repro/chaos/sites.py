@@ -20,7 +20,8 @@ points (``"p"``) stay unvalidated so unit tests can use ad-hoc points.
 from __future__ import annotations
 
 # point -> what fires there (one line; docs/fabric.md carries the recovery
-# invariant for each). Keys are "<family>.<state>".
+# invariant for each). Keys are "<family>.<state>"; states may themselves be
+# dotted ("cas.publish.pre_link" — family "cas", state "publish.pre_link").
 SITES: dict[str, str] = {
     # -- hop (store-mediated) ----------------------------------------------
     "hop.after_save": "after the transit CMI commits, before the svc/hop request",
@@ -56,6 +57,12 @@ SITES: dict[str, str] = {
     # -- agent (per-host spawn/respawn service) ----------------------------
     "agent.spawn": "in the agent, on a spawn request, before the fork",
     "agent.respawn": "in the agent's watch loop, before a failure respawn",
+    # -- cas (content-addressed object store, manifest v4) -----------------
+    "cas.publish.pre_link": "per new object: after tmp fsync, before the atomic link",
+    "cas.publish.post_objects": "all objects durable, before the manifest commit",
+    "cas.gc.mid_sweep": "in the mark-and-sweep GC, before each object unlink",
+    # -- wire, continued: compressed bulk payloads -------------------------
+    "wire.bulk.decompress": "receiver side, on each compressed bulk payload before decompression",
 }
 
 FAMILIES: tuple[str, ...] = tuple(

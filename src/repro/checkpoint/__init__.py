@@ -3,7 +3,9 @@
 This is the storage layer under the NavP core (`repro.core`). It implements
 what the paper calls the Checkpoint Memory Image (CMI) — but, per the paper's
 own minimal-CMI principle, it stores *only application state* (arrays +
-scalars), never the runtime environment. Layout of one CMI directory::
+scalars), never the runtime environment. Two on-disk layouts coexist:
+
+Striped (manifest v3; also reads the v1/v2 single-file seed format)::
 
     <name>/
       manifest.json   # structure skeleton + per-array chunk table + shardings
@@ -13,12 +15,19 @@ scalars), never the runtime environment. Layout of one CMI directory::
       COMMIT          # written last inside the staging dir; the directory is
                       # renamed into place only when fully consistent (Q4)
 
+Content-addressed (manifest v4, ``SaveOptions(cas=True)`` — the durable
+publish paths use this; transit CMIs stay v3)::
+
+    <store_root>/
+      objects/<digest[:2]>/<digest>   # every chunk exactly once, store-wide
+      <name>/manifest.json + COMMIT   # chunk table = digest references
+
 Key properties (each tested):
   * replica dedup — every distinct shard of a sharded ``jax.Array`` is written
     exactly once, regardless of how many devices hold a copy;
   * atomic commit — a crash at any point leaves either the old CMI or the new
     CMI, never a torn one (paper §Q4); every striped shard file is fsync'd
-    before COMMIT;
+    before COMMIT, and v4 objects are durable *before* the manifest commits;
   * parallel I/O — saves pipeline per-chunk hashing against striped writer
     threads; restores coalesce adjacent byte ranges per file and execute them
     on a thread pool (see ``docs/checkpoint_format.md``);
@@ -26,7 +35,12 @@ Key properties (each tested):
     chunks overlapping S ("carry only the data needed", paper §1 opt. 1);
   * delta references — a chunk entry may point into any of a *parent* CMI's
     data files, enabling incremental CMIs (paper §Q3) without copying
-    unchanged blocks.
+    unchanged blocks;
+  * content addressing — with ``cas=True`` the blake2b digest IS the chunk
+    identity: a publish writes only digests the store does not hold
+    (O(changed) bytes, cross-CMI dedup), GC is mark-and-sweep over the
+    object tree (``repro.checkpoint.cas``), and ``python -m
+    repro.checkpoint.fsck`` re-hashes a whole store offline.
 """
 
 from repro.checkpoint.format import (  # noqa: F401
@@ -41,6 +55,13 @@ from repro.checkpoint.atomic import (  # noqa: F401
     is_committed,
     list_committed,
 )
+from repro.checkpoint.cas import (  # noqa: F401
+    ObjectStore,
+    is_object_ref,
+    object_ref,
+    referenced_digests,
+)
+from repro.checkpoint.fsck import fsck_store  # noqa: F401
 from repro.checkpoint.serializer import (  # noqa: F401
     SaveOptions,
     load_arrays,

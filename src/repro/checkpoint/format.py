@@ -27,9 +27,14 @@ FORMAT_NAME = "navp-cmi"
 #   1 — implicit (manifests without a "version" field): single data-0.bin
 #   2 — explicit version field, same single-file layout
 #   3 — multi-file striped layout (data-0.bin … data-{W-1}.bin) + "data_files"
-# Readers accept any version <= FORMAT_VERSION; chunk entries name their file,
-# so v1/v2 CMIs load through the same path as v3.
-FORMAT_VERSION = 3
+#   4 — content-addressed layout: the CMI dir holds only the manifest; every
+#       chunk is a digest reference into the store-level object tree
+#       (ref="objects/<digest[:2]>", file=<digest>, offset=0) — see
+#       repro.checkpoint.cas. "data_files" is empty.
+# Readers accept any version <= FORMAT_VERSION; chunk entries name their
+# owner + file, so v1/v2 CMIs load through the same path as v3, and v4
+# digest references resolve through the same owner/file join.
+FORMAT_VERSION = 4
 
 
 def dtype_to_str(dt: Any) -> str:
@@ -52,6 +57,9 @@ class ChunkEntry:
     ``ref`` is ``None`` for chunks in this CMI's own data file, or the name of
     an ancestor CMI directory (sibling in the same store) for delta chunks
     that were *not* rewritten because their content hash matched the parent.
+    v4 chunks set ``ref="objects/<digest[:2]>"`` and ``file=<digest>`` — a
+    digest reference into the store's content-addressed object tree, resolved
+    by the same ``<store_root>/<ref>/<file>`` join as delta references.
     """
 
     slice: list[list[int]]  # [[start, stop], ...] per dim, full-array coords

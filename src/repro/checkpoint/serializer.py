@@ -68,6 +68,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint.atomic import COMMIT_FILE, CommitScope, is_committed
+from repro.checkpoint.cas import ObjectStore, ObjectWriterPool, object_ref
 from repro.checkpoint.format import (
     ArrayEntry,
     ChunkEntry,
@@ -113,6 +114,12 @@ class SaveOptions:
     # Number of striped data files / writer threads. 0 = min(8, cpu_count).
     # 1 = sequential single-file save (seed-compatible layout).
     writers: int = 0
+    # Content-addressed save (manifest v4): chunks become digest-named
+    # objects under <store_root>/objects/ and only digests absent from the
+    # store are written — O(changed) publish, cross-CMI dedup. The durable
+    # publish paths (DHP.publish / svc/publish_resident) turn this on;
+    # transit CMIs and direct callers keep the v3 striped layout.
+    cas: bool = False
 
     def resolved_writers(self) -> int:
         return self.writers if self.writers > 0 else default_writers()
@@ -483,6 +490,17 @@ class StateChunk:
     the baseline (a delta parent's data file, or a streaming receiver's
     cached state). ``crc32`` is ``None`` when hashing was skipped entirely
     (device changed-hint said "unchanged").
+
+    ``dup`` marks digest-first dedup hits: the ``have_digest`` oracle said
+    the consumer already holds these exact bytes under this hash (a CAS
+    store object, or an earlier chunk of the same stream), so ``data`` is
+    ``None`` even though the chunk is not a positional baseline reference —
+    the consumer resolves it by digest, not by (path, slice).
+
+    ``codec``/``cdata`` carry an optional compressed rendition produced on
+    the hash pool (only when it actually came out smaller); the wire sender
+    ships ``cdata`` with a per-frame codec marker while ``data`` stays the
+    raw bytes for CRC/identity purposes.
     """
 
     seq: int
@@ -493,6 +511,9 @@ class StateChunk:
     hash: str
     crc32: int | None
     ref: bool
+    dup: bool = False
+    codec: str | None = None
+    cdata: Any = None
 
 
 def _iter_array_blocks(x: Any, chunk_bytes: int):
@@ -542,6 +563,8 @@ def iter_state_chunks(
     changed_hint: Mapping[str, np.ndarray] | None = None,
     hash_threads: int = 0,
     window: int = 0,
+    have_digest: Callable[[str], bool] | None = None,
+    compress: Callable[[Any], "tuple[str, Any] | None"] | None = None,
 ) -> Any:
     """Chunk + hash ``tree`` in deterministic enumeration order.
 
@@ -555,6 +578,16 @@ def iter_state_chunks(
     ``core/delta.device_changed_hints``) short-circuits hashing entirely for
     chunks the device already proved unchanged — those reuse the baseline
     hash verbatim, keeping the grid continuous for the *next* delta.
+
+    ``have_digest`` is the digest-first enumeration oracle: chunks whose
+    content the consumer *already holds under this digest* — a CAS store
+    object (``ObjectStore.has``), or a chunk sent earlier in the same
+    stream — are yielded with ``dup=True`` and no payload, regardless of
+    their (path, slice) position. ``compress`` runs on the hash pool right
+    after hashing (so the I/O consumer never stalls behind compression) and
+    returns ``(codec, compressed_bytes)`` or ``None`` to keep the chunk
+    raw; it is skipped for chunks the baseline or ``have_digest`` already
+    excuse from travelling.
     """
     flat, _ = flatten_with_paths(tree)
     array_paths = sorted(k for k, v in flat.items() if _is_array_leaf(v))
@@ -570,6 +603,18 @@ def iter_state_chunks(
     pending: deque = deque()  # (path, bslice, itemsize, buf|None, fut|None)
     seq = 0
 
+    def hash_task(buf, key):
+        """Pool-side work: hash + CRC, then compress unless the chunk is
+        already excused from travelling (baseline hit / consumer-held
+        digest). ``have_digest`` may race the consumer's view here — a miss
+        only costs a wasted compression, never a wrong chunk."""
+        h, crc = _hash_and_crc(buf)
+        comp = None
+        if compress is not None and baseline.get(key) != h:
+            if have_digest is None or not have_digest(h):
+                comp = compress(buf)
+        return h, crc, comp
+
     def drain_one() -> StateChunk:
         nonlocal seq
         path, bslice, itemsize, buf, fut = pending.popleft()
@@ -579,13 +624,18 @@ def iter_state_chunks(
             ch = StateChunk(seq, path, [list(s) for s in bslice], None, nbytes,
                             baseline[key], None, True)
         else:
-            h, crc = fut.result() if fut is not None else _hash_and_crc(buf)
+            h, crc, comp = fut.result() if fut is not None else hash_task(buf, key)
             if baseline.get(key) == h:
                 ch = StateChunk(seq, path, [list(s) for s in bslice], None, nbytes,
                                 h, crc, True)
+            elif have_digest is not None and have_digest(h):
+                ch = StateChunk(seq, path, [list(s) for s in bslice], None, nbytes,
+                                h, crc, False, dup=True)
             else:
                 ch = StateChunk(seq, path, [list(s) for s in bslice], buf, nbytes,
                                 h, crc, False)
+                if comp is not None:
+                    ch.codec, ch.cdata = comp
         seq += 1
         return ch
 
@@ -608,7 +658,7 @@ def iter_state_chunks(
                     pending.append((apath, bslice, itemsize, None, None))
                 else:
                     buf = _byte_view(block)
-                    fut = pool.submit(_hash_and_crc, buf) if pool is not None else None
+                    fut = pool.submit(hash_task, buf, key) if pool is not None else None
                     pending.append((apath, bslice, itemsize, buf, fut))
                 while len(pending) >= window:
                     yield drain_one()
@@ -655,6 +705,15 @@ class StateAssembler:
         if baseline is not None:
             self._baseline_flat, _ = flatten_with_paths(baseline)
         self._baseline_grid = dict(baseline_grid or {})
+        # digest -> ("self"|"base", path, bslice): where bytes with that
+        # hash can be copied from. Seeded with the baseline grid, grown as
+        # chunks land — resolves dup (digest-first) chunks whose content
+        # exists at a *different* (path, slice) than where it is needed.
+        self._by_digest: dict[str, tuple[str, str, tuple]] = {}
+        if self._baseline_flat is not None:
+            for (bpath, bkey), bhash in self._baseline_grid.items():
+                if bpath in self._baseline_flat:
+                    self._by_digest.setdefault(bhash, ("base", bpath, bkey))
 
     def _box(self, arr: np.ndarray, bslice) -> tuple:
         if not bslice:
@@ -689,13 +748,26 @@ class StateAssembler:
         crc32: int | None = None,
         ref: bool = False,
         inplace: bool = False,
+        dup: bool = False,
     ) -> None:
         """Account one chunk. ``inplace=True`` means the payload was already
         ``recv_into``'d through :meth:`target_view` (data is that view, used
-        only for CRC validation)."""
+        only for CRC validation). ``dup=True`` chunks carry no payload at
+        all: their bytes are resolved by digest from a region this stream
+        (or its baseline) already holds."""
         arr = self.arrays[path]
         key = (path, bslice_key(bslice))
-        if ref:
+        if dup:
+            if hash is None or hash not in self._by_digest:
+                raise StreamStateError(f"dup chunk {key}: digest not held here")
+            where, spath, skey = self._by_digest[hash]
+            src_tree = self._baseline_flat if where == "base" else self.arrays
+            src_arr = np.asarray(src_tree[spath])
+            raw = np.ascontiguousarray(src_arr[self._box(src_arr, skey)])
+            shape = tuple(b - a for a, b in bslice)
+            block = np.frombuffer(raw.tobytes(), dtype=arr.dtype).reshape(shape)
+            arr[self._box(arr, bslice)] = block
+        elif ref:
             if self._baseline_flat is None or path not in self._baseline_flat:
                 raise StreamStateError(f"ref chunk {key} but no baseline state")
             if hash is not None and self._baseline_grid.get(key) not in (None, hash):
@@ -711,6 +783,7 @@ class StateAssembler:
                 arr[self._box(arr, bslice)] = block
         if hash is not None:
             self.grid[key] = hash
+            self._by_digest.setdefault(hash, ("self", path, key[1]))
         vol = 1
         for a, b in bslice:
             vol *= b - a
@@ -741,7 +814,8 @@ def assemble_state_chunks(
         meta, baseline=baseline, baseline_grid=baseline_grid, validate_crc=validate_crc
     )
     for ch in chunks:
-        asm.put(ch.path, ch.slice, ch.data, hash=ch.hash, crc32=ch.crc32, ref=ch.ref)
+        asm.put(ch.path, ch.slice, ch.data, hash=ch.hash, crc32=ch.crc32, ref=ch.ref,
+                dup=getattr(ch, "dup", False))
     return asm.finish(), asm.grid
 
 
@@ -755,8 +829,18 @@ def save_checkpoint(
     options: SaveOptions | None = None,
     _crash_after_data: bool = False,
 ) -> Manifest:
-    """Serialize ``tree`` as CMI ``<store_root>/<name>``. Returns the manifest."""
+    """Serialize ``tree`` as CMI ``<store_root>/<name>``. Returns the manifest.
+
+    With ``options.cas`` the save is content-addressed (manifest v4): chunk
+    bytes become digest-named objects in the store-level object tree and
+    only digests the store does not already hold are written.
+    """
     opts = options or SaveOptions()
+    if opts.cas:
+        return _save_checkpoint_cas(
+            store_root, name, tree, step=step, meta=meta, opts=opts,
+            _crash_after_data=_crash_after_data,
+        )
     writers = opts.resolved_writers()
     store_root = Path(store_root)
     store_root.mkdir(parents=True, exist_ok=True)
@@ -816,6 +900,7 @@ def save_checkpoint(
             structure=structure,
             arrays=arrays,
             parent=opts.parent,
+            version=3,  # striped layout; v4 is the CAS path below
             data_files=sink.data_files,
             extra={"stats": stats},
         )
@@ -824,6 +909,128 @@ def save_checkpoint(
         "saved CMI %s: %d chunks (%d ref'd) across %d files, %.1f MiB written, %.1f MiB ref'd",
         name, stats["chunks"], stats["ref_chunks"], writers,
         stats["written_bytes"] / 2**20, stats["ref_bytes"] / 2**20,
+    )
+    return manifest
+
+
+def _save_checkpoint_cas(
+    store_root: str | os.PathLike,
+    name: str,
+    tree: Any,
+    *,
+    step: int,
+    meta: dict | None,
+    opts: SaveOptions,
+    _crash_after_data: bool = False,
+) -> Manifest:
+    """Content-addressed save (manifest v4).
+
+    Every chunk entry is a digest reference (``ref="objects/<d[:2]>"``,
+    ``file=<digest>``) into the store's object tree; only digests the store
+    does not already hold are written, in parallel, by an
+    :class:`~repro.checkpoint.cas.ObjectWriterPool`. Durability order:
+    objects are fsync'd + linked (``cas.publish.pre_link`` per object),
+    bucket dirs fsync'd, ``cas.publish.post_objects`` fires, and only then
+    does ``CommitScope`` stage + COMMIT the manifest — a kill anywhere
+    leaves either the previous CMI intact or benign orphan objects, never
+    a manifest with dangling refs. The whole sequence runs under the
+    store's *shared* fcntl guard so a concurrent mark-and-sweep GC cannot
+    delete objects out from under an in-flight publish.
+    """
+    from repro.chaos import faults
+
+    store_root = Path(store_root)
+    store_root.mkdir(parents=True, exist_ok=True)
+    final = store_root / name
+    store = ObjectStore(store_root)
+
+    parent_chunks: dict[tuple[str, tuple], ChunkEntry] = {}
+    if opts.parent is not None:
+        pman = load_manifest(store_root, opts.parent)
+        if pman.version >= 4:
+            # Only a CAS parent guarantees every baseline digest exists as
+            # an object; delta-chaining against a v3 parent would mint
+            # digest refs to bytes that live in the parent's stripe files.
+            # Fall back to a full (still store-deduped) enumeration.
+            for apath, aentry in pman.arrays.items():
+                for c in aentry.chunks:
+                    key = (apath, tuple(tuple(s) for s in c.slice))
+                    parent_chunks[key] = c
+
+    flat, _ = flatten_with_paths(tree)
+    array_paths = {k for k, v in flat.items() if _is_array_leaf(v)}
+    structure = encode_structure(tree, array_paths)
+    arrays: dict[str, ArrayEntry] = {}
+    for apath in sorted(array_paths):
+        x = flat[apath]
+        arrays[apath] = ArrayEntry(
+            shape=list(x.shape),
+            dtype=dtype_to_str(np.dtype(x.dtype)),
+            chunks=[],
+            sharding=_sharding_record(x),
+        )
+    baseline = {key: c.hash for key, c in parent_chunks.items()}
+    changed_hint = opts.changed_hint if parent_chunks else {}
+    stats = {"written_bytes": 0, "ref_bytes": 0, "chunks": 0, "ref_chunks": 0,
+             "dedup_chunks": 0, "objects_written": 0}
+
+    with store.publish_guard():
+        pool = ObjectWriterPool(store, opts.resolved_writers())
+        try:
+            for ch in iter_state_chunks(
+                tree,
+                chunk_bytes=opts.chunk_bytes,
+                baseline=baseline,
+                changed_hint=changed_hint,
+                have_digest=store.has,
+            ):
+                digest = ch.hash
+                crc = ch.crc32
+                if crc is None:  # device-hint ref: hashing skipped entirely
+                    crc = parent_chunks[(ch.path, bslice_key(ch.slice))].crc32
+                arrays[ch.path].chunks.append(ChunkEntry(
+                    slice=[list(s) for s in ch.slice],
+                    file=digest,
+                    offset=0,
+                    nbytes=ch.nbytes,
+                    crc32=crc,
+                    hash=digest,
+                    ref=object_ref(digest),
+                ))
+                stats["chunks"] += 1
+                if ch.data is None:  # baseline ref, hint ref, or dedup hit
+                    stats["ref_chunks"] += 1
+                    stats["ref_bytes"] += ch.nbytes
+                    if ch.dup:
+                        stats["dedup_chunks"] += 1
+                else:
+                    pool.submit(digest, ch.data)
+        except BaseException:
+            try:
+                pool.close()  # orphan objects only; no manifest committed
+            except Exception:
+                pass  # the original failure is the one worth surfacing
+            raise
+        stats["written_bytes"], stats["objects_written"] = pool.close()
+        faults.fire("cas.publish.post_objects")
+
+        manifest = Manifest(
+            step=step,
+            meta=meta or {},
+            structure=structure,
+            arrays=arrays,
+            parent=opts.parent,
+            version=4,
+            data_files=[],
+            extra={"stats": stats},
+        )
+        with CommitScope(final, crash_after_data=_crash_after_data) as scope:
+            scope.write_text("manifest.json", manifest.dumps())
+    logger.debug(
+        "saved CAS CMI %s: %d chunks (%d ref'd, %d dedup'd), %d new objects, "
+        "%.1f MiB written",
+        name, stats["chunks"], stats["ref_chunks"], stats["dedup_chunks"],
+        stats["objects_written"], stats["written_bytes"] / 2**20,
     )
     return manifest
 

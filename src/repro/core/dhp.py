@@ -330,11 +330,16 @@ class DHP:
                 raise ValueError('publish(status="ckpt") needs state')
             name = f"cmi-{step:010d}-{uuid.uuid4().hex[:8]}"
             parent = self.delta.parent_for(job_id, self.jobstore)
+            # Durable publishes are content-addressed (manifest v4): chunks
+            # land once in the job store's objects/ tree and successive
+            # publishes write only the digests the store does not already
+            # hold — the O(changed) publish that makes the paper's C cheap.
             opts = SaveOptions(
                 chunk_bytes=self.chunk_bytes,
                 parent=parent,
                 changed_hint=changed_hint or {},
                 writers=self.writers,
+                cas=True,
             )
             self.nbs.plugins.emit("on_checkpoint", node=self.node, cmi=name, step=step)
             if self.async_publish:
@@ -352,7 +357,8 @@ class DHP:
                 save_cmi(
                     self.jobstore.cmi_root(job_id), name, product, step=step,
                     meta={"kind": "product", **(meta or {})},
-                    options=SaveOptions(chunk_bytes=self.chunk_bytes, writers=self.writers),
+                    options=SaveOptions(chunk_bytes=self.chunk_bytes,
+                                        writers=self.writers, cas=True),
                 )
             self.jobstore.svc_publish_job(job_id, STATUS_FINISHED, product=name, step=step)
             self.nbs.plugins.emit("on_publish", job_id=job_id, status=status, name=name)
@@ -373,12 +379,17 @@ class DHP:
         if self.jobstore is None:
             raise RuntimeError("publish requires a JobStore")
         name = f"cmi-{step:010d}-{uuid.uuid4().hex[:8]}"
+        # Delta-chain mid-tour publishes too: the holding worker saves v4
+        # against the previous stage's manifest, so a tour stage that only
+        # touched part of the state writes only the changed objects.
+        parent = self.delta.parent_for(job_id, self.jobstore)
         self.nbs.plugins.emit("on_checkpoint", node=ref.node, cmi=name, step=step)
         self.nbs.call(
             ref.node, "svc/publish_resident",
             token=ref.token, store_root=str(self.jobstore.cmi_root(job_id)),
             name=name, step=step, extra=extra or {}, meta=meta or {},
             chunk_bytes=self.chunk_bytes, writers=self.writers or 1,
+            parent=parent, cas=True,
         )
         self.jobstore.svc_publish_job(
             job_id, STATUS_CKPT, cmi=name, step=step,

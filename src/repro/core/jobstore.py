@@ -36,7 +36,8 @@ from pathlib import Path
 from typing import Any
 
 from repro.chaos import faults
-from repro.checkpoint.atomic import gc_orphans, is_committed
+from repro.checkpoint.atomic import gc_orphans, is_committed, list_committed
+from repro.checkpoint.cas import ObjectStore, referenced_digests
 from repro.checkpoint.serializer import load_manifest
 from repro.utils import logger
 
@@ -304,16 +305,21 @@ class JobStore:
     def gc_cmis(self, job_id: str, keep_last: int = 2) -> list[str]:
         """Drop old CMIs, retaining delta-chain ancestors of anything kept.
 
-        The paper replaces the last CMI with the latest; with delta chains we
-        must keep every ancestor a kept CMI's chunks reference. ``parent``
-        links in manifests make the closure computable without reading data.
+        The paper replaces the last CMI with the latest; with v1–v3 delta
+        chains we must keep every ancestor a kept CMI's chunks reference —
+        ``parent`` links in manifests make the closure computable without
+        reading data. v4 (content-addressed) manifests need no ancestor
+        dirs at all: their chunks live in the shared object tree, so after
+        dropping manifest dirs the ``keep_last`` policy becomes a
+        manifest-root mark-and-sweep over the refcounted objects
+        (:meth:`_gc_objects`).
         """
         cmis = self.list_cmis(job_id)
         keep = set(cmis[-keep_last:]) if keep_last > 0 else set()
         job = self.read_job(job_id)
         if job.cmi:
             keep.add(job.cmi)
-        # close over delta parents
+        # close over delta parents (v4 chunks live in objects/, not parents)
         frontier = list(keep)
         while frontier:
             name = frontier.pop()
@@ -321,7 +327,7 @@ class JobStore:
                 man = load_manifest(self.cmi_root(job_id), name)
             except FileNotFoundError:
                 continue
-            if man.parent and man.parent not in keep:
+            if man.version < 4 and man.parent and man.parent not in keep:
                 keep.add(man.parent)
                 frontier.append(man.parent)
         removed = []
@@ -330,6 +336,31 @@ class JobStore:
                 shutil.rmtree(self.job_dir(job_id) / name, ignore_errors=True)
                 removed.append(name)
         gc_orphans(self.job_dir(job_id))
-        if removed:
-            logger.debug("gc job %s: removed %s", job_id, removed)
+        swept = self._gc_objects(job_id)
+        if removed or swept:
+            logger.debug("gc job %s: removed %s, swept %d object(s)",
+                         job_id, removed, len(swept))
         return removed
+
+    def _gc_objects(self, job_id: str) -> list[str]:
+        """Mark-and-sweep the job's content-addressed object tree.
+
+        Mark: every digest referenced by any *committed* manifest still in
+        the job dir (surviving CMIs and products are the GC roots). Sweep:
+        unlink everything else. The exclusive fcntl guard mutually excludes
+        in-flight publishers (which hold the shared guard across object
+        writes + manifest commit), so the mark set can never miss a
+        manifest that commits mid-sweep.
+        """
+        root = self.cmi_root(job_id)
+        store = ObjectStore(root)
+        if not store.dir.is_dir():
+            return []
+        with store.sweep_guard():
+            marked: set[str] = set()
+            for name in list_committed(root):
+                try:
+                    marked |= referenced_digests(load_manifest(root, name))
+                except Exception:
+                    return []  # unreadable root: abort, sweep nothing
+            return store.sweep(marked)

@@ -428,13 +428,22 @@ class NodeServer:
         meta: dict | None = None,
         chunk_bytes: int = 16 << 20,
         writers: int = 1,
+        parent: str | None = None,
+        cas: bool = False,
     ) -> dict:
         """Save a resident state as a committed CMI at ``store_root`` (the
         caller's jobstore cmi_root on the shared filesystem) WITHOUT dropping
         the resident copy — the disk-durable mid-tour publish. ``extra``
         bookkeeping keys ride only in the saved copy; non-dict states are
         wrapped exactly like Itinerary.run's local publish path so resume()
-        can unwrap either."""
+        can unwrap either.
+
+        With ``cas=True`` the save is content-addressed (manifest v4) and
+        delta-chains against ``parent`` (the previous stage's manifest in the
+        same store): successive tour-stage publishes write only the objects
+        the shared store does not already hold, and concurrent workers
+        publishing near-identical states dedupe under the store's fcntl
+        publish/sweep discipline."""
         from repro.checkpoint.serializer import SaveOptions
         from repro.core.cmi import save_cmi
 
@@ -452,7 +461,9 @@ class NodeServer:
         save_cmi(
             Path(store_root), name, saved, step=step,
             meta={"node": self.node_name, "resident": token, **(meta or {})},
-            options=SaveOptions(chunk_bytes=int(chunk_bytes), writers=int(writers) or 1),
+            options=SaveOptions(chunk_bytes=int(chunk_bytes),
+                                writers=int(writers) or 1,
+                                parent=parent, cas=bool(cas)),
         )
         logger.info("svc/publish_resident: %s -> %s/%s (step %d)",
                     token, store_root, name, step)
@@ -478,6 +489,10 @@ class NodeServer:
                     "accept": True,
                     "baseline_ok": lookup(kwargs.get("baseline")) is not None
                     if kwargs.get("baseline") else False,
+                    # compression/dedup negotiation: what WE can decompress
+                    # (per-frame "z" markers) and that dup frames resolve here
+                    "codecs": list(wire.speakable_codecs()),
+                    "dup_ok": True,
                 },
             })
             state, step, grid, counters = stream.receive_state_stream(
@@ -559,6 +574,9 @@ class NodeServer:
             _, n_chunks, _, _ = stream.pump_state_chunks(
                 conn, state, chunk_bytes=int(kwargs.get("chunk_bytes", 16 << 20)),
                 fault_point="fetch_stream.mid_pump",
+                codec=wire.negotiate_codec(wire.available_codecs(),
+                                           kwargs.get("codecs")),
+                dedup=bool(kwargs.get("dup_ok")),
             )
             ack = reader.recv_msg()
             if not (isinstance(ack, dict) and ack.get("ack")):

@@ -92,22 +92,40 @@ def pump_state_chunks(
     hash_threads: int = 0,
     pause_s: float = 0.0,
     fault_point: str | None = None,
+    codec: str | None = None,
+    dedup: bool = False,
 ) -> tuple[dict, int, int, int]:
     """Send every chunk of ``state`` as bulk frames followed by eos.
 
     The shared sending half of hop streams, relays, and streamed fetches.
-    Returns ``(sent_grid, n_chunks, n_data, sent_bytes)``. ``fault_point``
-    names the chaos point fired once per chunk sent (the three protocols
-    sharing this pump each label their own mid-stream state).
+    Returns ``(sent_grid, n_chunks, n_data, sent_bytes)``; ``sent_bytes``
+    counts payload bytes as they went down the socket (post-compression).
+    ``fault_point`` names the chaos point fired once per chunk sent (the
+    three protocols sharing this pump each label their own mid-stream state).
+
+    ``codec`` (negotiated — the receiver must speak it) compresses payloads
+    on the hash-pool threads, per-frame ``"z"`` marker, raw fallback when a
+    chunk does not shrink. ``dedup`` (receiver must understand ``dup``
+    frames) sends repeated-content chunks once: later occurrences go as
+    payload-free digest references the assembler resolves by hash.
     """
     sent_grid: dict[tuple, str] = {}
     n_chunks = n_data = sent_bytes = 0
+    sent_digests: set[str] = set()
+    comp = None
+    if codec is not None:
+        def comp(buf, _c=codec):
+            data = wire.compress_payload(_c, buf)
+            n = buf.nbytes if isinstance(buf, memoryview) else len(buf)
+            return (_c, data) if len(data) < n else None
     for ch in iter_state_chunks(
         state,
         chunk_bytes=chunk_bytes,
         baseline=baseline,
         changed_hint=changed_hint,
         hash_threads=hash_threads,
+        have_digest=sent_digests.__contains__ if dedup else None,
+        compress=comp,
     ):
         header = {
             "path": ch.path,
@@ -116,14 +134,26 @@ def pump_state_chunks(
             "crc32": ch.crc32,
             "ref": ch.ref,
         }
-        wire.send_bulk(sock, header, ch.data if not ch.ref else b"")
+        if ch.dup:
+            header["dup"] = True
+            payload = b""
+        elif ch.ref:
+            payload = b""
+        elif ch.codec is not None:
+            header["z"] = ch.codec
+            payload = ch.cdata
+        else:
+            payload = ch.data
+        wire.send_bulk(sock, header, payload)
         if fault_point is not None:
             faults.fire(fault_point, sock=sock)
         sent_grid[(ch.path, bslice_key(ch.slice))] = ch.hash
+        if ch.hash is not None:
+            sent_digests.add(ch.hash)
         n_chunks += 1
-        if not ch.ref:
+        if not ch.ref and not ch.dup:
             n_data += 1
-            sent_bytes += ch.nbytes
+            sent_bytes += payload.nbytes if isinstance(payload, memoryview) else len(payload)
         if pause_s:
             time.sleep(pause_s)
     wire.send_bulk(sock, {"eos": True, "chunks": n_chunks})
@@ -165,11 +195,13 @@ def send_state_stream(
         sock.settimeout(timeout_s)
         reader = wire.FrameReader(sock)
         meta = state_stream_meta(state)
+        my_codecs = list(wire.available_codecs())
         req_kwargs = {
             "src": src,
             "step": int(step),
             "meta": meta,
             "baseline": baseline_token,
+            "codecs": my_codecs,  # compression offer; reply names the peer's
         }
         if fail_after_chunks is not None:  # fault-injection (tests)
             req_kwargs["fail_after_chunks"] = int(fail_after_chunks)
@@ -177,10 +209,15 @@ def send_state_stream(
         accept = reader.recv_msg()
         if not (isinstance(accept, dict) and accept.get("ok")):
             raise StreamHopError(f"stream rejected: {accept!r}")
-        baseline_ok = bool((accept.get("result") or {}).get("baseline_ok"))
+        res = accept.get("result") or {}
+        baseline_ok = bool(res.get("baseline_ok"))
         use_baseline = baseline_grid if (baseline_ok and baseline_grid) else None
         if baseline_token is not None and not baseline_ok:
             logger.info("hop_stream: receiver dropped baseline %s; full stream", baseline_token)
+        # per-connect negotiation: pre-codec receivers reply without "codecs"
+        # (or with an empty list) and the stream degrades to raw frames; same
+        # for digest-dedup "dup" frames, gated on the receiver saying dup_ok
+        codec = wire.negotiate_codec(my_codecs, res.get("codecs"))
         sent_grid, n_chunks, n_data, sent_bytes = pump_state_chunks(
             sock,
             state,
@@ -190,6 +227,8 @@ def send_state_stream(
             hash_threads=hash_threads,
             pause_s=pause_s,
             fault_point=fault_point,
+            codec=codec,
+            dedup=bool(res.get("dup_ok")),
         )
         final = reader.recv_msg()
         if not (isinstance(final, dict) and final.get("ok")):
@@ -262,10 +301,23 @@ def receive_state_stream(
                 )
             break
         bslice = header["slice"]
-        if header.get("ref"):
+        if header.get("ref") or header.get("dup"):
             if payload_len:
                 reader.read_payload(payload_len)
-            asm.put(header["path"], bslice, ref=True, hash=header.get("hash"))
+            asm.put(header["path"], bslice, ref=bool(header.get("ref")),
+                    dup=bool(header.get("dup")), hash=header.get("hash"))
+        elif header.get("z"):
+            # compressed payload: decompress (chaos point + corruption →
+            # WireError inside), then CRC-check the DECOMPRESSED bytes
+            view = wire.read_bulk_payload(reader, header, payload_len)
+            dest = asm.target_view(header["path"], bslice)
+            if dest is not None and dest.nbytes == view.nbytes:
+                dest[:] = view
+                asm.put(header["path"], bslice, dest, hash=header.get("hash"),
+                        crc32=header.get("crc32"), inplace=True)
+            else:
+                asm.put(header["path"], bslice, view, hash=header.get("hash"),
+                        crc32=header.get("crc32"))
         else:
             dest = asm.target_view(header["path"], bslice)
             if dest is not None and dest.nbytes == payload_len:
@@ -316,7 +368,11 @@ def fetch_state_stream(
         wire.send_msg(sock, {
             "id": 1, "svc": FETCH_STREAM_SVC,
             "kwargs": {"token": token, "drop": bool(drop),
-                       "chunk_bytes": int(chunk_bytes)},
+                       "chunk_bytes": int(chunk_bytes),
+                       # we are the receiver here: advertise what we can
+                       # decompress and that we resolve dup (digest) frames
+                       "codecs": list(wire.speakable_codecs()),
+                       "dup_ok": True},
         })
         accept = reader.recv_msg()
         if not (isinstance(accept, dict) and accept.get("ok")):

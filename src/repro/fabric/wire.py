@@ -42,6 +42,7 @@ import random
 import socket
 import struct
 import time
+import zlib
 from typing import Any
 
 from repro.chaos import faults
@@ -53,6 +54,15 @@ try:  # optional, baked into some images
 except Exception:  # pragma: no cover - exercised only without msgpack
     msgpack = None
     _HAVE_MSGPACK = False
+
+try:  # optional: best bulk-payload codec when the image carries it
+    import zstandard as _zstd  # type: ignore
+except Exception:
+    _zstd = None
+try:  # optional: fast fallback codec
+    import lz4.frame as _lz4f  # type: ignore
+except Exception:
+    _lz4f = None
 
 _LEN = struct.Struct(">I")
 CODEC_JSON = b"J"
@@ -231,6 +241,146 @@ class FrameReader:
 
 def recv_msg(sock: socket.socket) -> Any:
     return FrameReader(sock).recv_msg()
+
+
+# ---------------------------------------------------------------------------
+# bulk payload compression
+# ---------------------------------------------------------------------------
+#
+# A bulk frame may carry a compressed payload; the header then has a ``"z"``
+# key naming the codec — the per-frame marker idiom the control plane already
+# uses for its codec byte. Codecs are negotiated at connect time (each side
+# advertises ``available_codecs()``; the sender picks the first common one)
+# and every frame stays individually self-describing, so a sender is free to
+# ship any frame raw (e.g. when compression did not shrink it).
+#
+# The chunk CRC in the header is always computed over the UNCOMPRESSED bytes:
+# integrity checks run after decompression, and a flipped byte in a
+# compressed payload surfaces as a WireError from :func:`decompress_payload`
+# (or a CRC mismatch downstream) — never as a codec exception escaping the
+# frame reader.
+
+# env switch: "off"/"raw"/"0"/"none" disables compression entirely (the CI
+# leg proving raw-fallback negotiation); a codec name restricts to that codec.
+COMPRESSION_ENV = "REPRO_STREAM_COMPRESSION"
+
+
+def available_codecs() -> tuple[str, ...]:
+    """Codecs this process offers for bulk payloads, best first; () = raw.
+
+    The default ladder holds only the *fast* codecs (zstd, lz4 — present
+    when their packages import): their per-byte cost is far below socket
+    throughput, so offering them is always safe. Stdlib zlib is deliberately
+    NOT offered by default — it is slower than a local socket and would tax
+    every hop — but naming it (``REPRO_STREAM_COMPRESSION=zlib``) opts in
+    for thin-pipe deployments with no zstd/lz4 wheel. ``off``/``raw``/``0``/
+    ``none`` disables compression entirely.
+    """
+    mode = os.environ.get(COMPRESSION_ENV, "").strip().lower()
+    if mode in ("off", "raw", "0", "none"):
+        return ()
+    speakable = []
+    if _zstd is not None:
+        speakable.append("zstd")
+    if _lz4f is not None:
+        speakable.append("lz4")
+    speakable.append("zlib")  # stdlib: always speakable, never default
+    if mode:
+        return (mode,) if mode in speakable else ()
+    return tuple(c for c in speakable if c != "zlib")
+
+
+def speakable_codecs() -> tuple[str, ...]:
+    """Codecs this process can *decompress* — what a receiver advertises.
+
+    Distinct from :func:`available_codecs` (the sender's offer policy):
+    decoding zlib is cheap relative to any transport, so a receiver always
+    lists it even though senders only offer it on explicit opt-in. ``off``
+    still disables both directions.
+    """
+    mode = os.environ.get(COMPRESSION_ENV, "").strip().lower()
+    if mode in ("off", "raw", "0", "none"):
+        return ()
+    out = []
+    if _zstd is not None:
+        out.append("zstd")
+    if _lz4f is not None:
+        out.append("lz4")
+    out.append("zlib")
+    if mode:
+        return (mode,) if mode in out else ()
+    return tuple(out)
+
+
+def negotiate_codec(mine, theirs) -> str | None:
+    """First codec of ``mine`` the peer also speaks (``None`` = raw)."""
+    theirs = set(theirs or ())
+    for c in mine or ():
+        if c in theirs:
+            return c
+    return None
+
+
+def compress_payload(codec: str, buf) -> bytes:
+    """Compress one bulk payload; speed-leaning levels (the socket writer
+    must stay saturated — this runs on the sender's hash-pool threads)."""
+    if codec == "zstd":
+        return _zstd.ZstdCompressor(level=1).compress(bytes(buf))
+    if codec == "lz4":
+        return _lz4f.compress(bytes(buf))
+    if codec == "zlib":
+        return zlib.compress(buf, 1)
+    raise WireError(f"unknown compression codec {codec!r}")
+
+
+def decompress_payload(codec: str, buf) -> bytes:
+    """Inverse of :func:`compress_payload`; corrupt input is a WireError."""
+    try:
+        if codec == "zstd":
+            if _zstd is None:
+                raise WireError("peer sent zstd but zstandard is unavailable")
+            return _zstd.ZstdDecompressor().decompress(bytes(buf))
+        if codec == "lz4":
+            if _lz4f is None:
+                raise WireError("peer sent lz4 but lz4 is unavailable")
+            return _lz4f.decompress(bytes(buf))
+        if codec == "zlib":
+            return zlib.decompress(buf)
+    except WireError:
+        raise
+    except Exception as e:
+        # a flipped byte in a compressed payload must surface as frame
+        # corruption, not a codec exception escaping the frame reader
+        raise WireError(f"corrupt {codec} bulk payload: {e}") from e
+    raise WireError(f"unknown compression codec {codec!r}")
+
+
+def read_bulk_payload(reader: FrameReader, header, payload_len: int,
+                      into: memoryview | None = None) -> memoryview:
+    """Read one bulk payload, honoring the header's ``"z"`` codec marker.
+
+    Uncompressed payloads keep the zero-copy ``recv_into`` path. Compressed
+    ones land in the reader's scratch buffer, pass the chaos point
+    (``wire.bulk.decompress`` — a garble here models wire corruption of the
+    compressed bytes), and are decompressed; downstream CRC checks then run
+    on the *decompressed* bytes.
+    """
+    codec = header.get("z") if isinstance(header, dict) else None
+    if not codec:
+        return reader.read_payload(payload_len, into=into)
+    raw = reader.read_payload(payload_len)
+    garbled = faults.fire("wire.bulk.decompress", sock=reader.sock, data=raw)
+    if garbled is not None:
+        raw = garbled
+    data = decompress_payload(codec, raw)
+    if into is not None:
+        if into.nbytes != len(data):
+            raise WireError(
+                f"decompressed payload is {len(data)} bytes, need {into.nbytes}"
+            )
+        into[:] = data
+        return into
+    return memoryview(data)
 
 
 # ---------------------------------------------------------------------------

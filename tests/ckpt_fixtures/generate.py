@@ -1,0 +1,119 @@
+"""Generate the golden backward-compat CMI fixtures (run once, commit output).
+
+Three tiny CMIs, one per historical manifest version, whose array contents
+are a pure function of the version number (see ``expected_tree``) so the
+loader test can verify bit-identical restore without trusting this script:
+
+* ``v1-cmi`` — seed format: single ``data-0.bin``, manifest with **no**
+  ``version`` field (readers treat absence as version 1).
+* ``v2-cmi`` — explicit ``"version": 2``, same single-file layout.
+* ``v3-cmi`` — striped layout (``data-0.bin``/``data-1.bin`` + ``data_files``),
+  written by the current v3 save path.
+
+v1/v2 are hand-assembled byte-for-byte rather than produced by any current
+writer: the point of a golden fixture is that it never changes even when the
+writer does. Usage::
+
+    PYTHONPATH=src python tests/ckpt_fixtures/generate.py
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+from repro.checkpoint.serializer import SaveOptions, save_checkpoint
+from repro.utils import content_hash, crc32_of
+
+FIXTURES = Path(__file__).resolve().parent
+
+
+def expected_tree(version: int) -> dict:
+    """Deterministic contents for the version-``version`` fixture."""
+    base = np.arange(48, dtype=np.float32).reshape(12, 4)
+    return {
+        "model": {
+            "w": base + float(version),
+            "b": (np.arange(12, dtype=np.int64) * version),
+        },
+        "tag": f"golden-v{version}",
+        "step": 10 * version,
+    }
+
+
+def _write_legacy(root: Path, version: int) -> None:
+    """Hand-assemble a v1/v2 CMI: one data-0.bin, one chunk per array."""
+    tree = expected_tree(version)
+    root.mkdir(parents=True, exist_ok=True)
+    arrays = {}
+    blob = bytearray()
+    for path, arr in (("model/b", tree["model"]["b"]), ("model/w", tree["model"]["w"])):
+        buf = np.ascontiguousarray(arr).tobytes()
+        chunk = {
+            "slice": [[0, int(n)] for n in arr.shape],
+            "file": "data-0.bin",
+            "offset": len(blob),
+            "nbytes": len(buf),
+            "crc32": crc32_of(buf),
+            "hash": content_hash(buf),
+        }
+        blob += buf
+        arrays[path] = {
+            "shape": list(arr.shape),
+            "dtype": arr.dtype.name,
+            "chunks": [chunk],
+            "sharding": None,
+        }
+    structure = {
+        "$kind": "dict",
+        "items": {
+            "model": {
+                "$kind": "dict",
+                "items": {
+                    "b": {"$array": "model/b"},
+                    "w": {"$array": "model/w"},
+                },
+            },
+            "tag": {"$scalar": tree["tag"]},
+            "step": {"$scalar": tree["step"]},
+        },
+    }
+    manifest = {
+        "format": "navp-cmi",
+        "step": tree["step"],
+        "meta": {"fixture": f"v{version}"},
+        "parent": None,
+        "structure": structure,
+        "arrays": arrays,
+        "extra": {},
+    }
+    if version >= 2:
+        manifest["version"] = version
+    (root / "data-0.bin").write_bytes(bytes(blob))
+    (root / "manifest.json").write_text(json.dumps(manifest, sort_keys=True))
+    (root / "COMMIT").write_text(json.dumps({"committed_at": 0.0}))
+
+
+def main() -> int:
+    for version in (1, 2):
+        _write_legacy(FIXTURES / f"v{version}-cmi", version)
+    # v3 via the real striped writer: small chunk_bytes -> several chunks
+    # spread over two stripe files.
+    man = save_checkpoint(
+        FIXTURES,
+        "v3-cmi",
+        expected_tree(3),
+        step=30,
+        meta={"fixture": "v3"},
+        options=SaveOptions(chunk_bytes=64, writers=2),
+    )
+    assert man.version == 3 and man.data_files, man
+    print(f"wrote fixtures under {FIXTURES}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -44,7 +44,7 @@ def test_multiwriter_stripes_and_roundtrips(tmp_path):
     m = save_checkpoint(
         tmp_path, "c", tree, options=SaveOptions(chunk_bytes=256, writers=4)
     )
-    assert m.version == FORMAT_VERSION
+    assert m.version == 3  # striped stripe-file layout; v4 is the CAS path
     assert m.data_files == [f"data-{i}.bin" for i in range(4)]
     for f in m.data_files:
         assert (tmp_path / "c" / f).exists()

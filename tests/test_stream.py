@@ -234,3 +234,111 @@ def test_save_and_stream_share_one_grid():
     assert disk_keys == stream_keys
     for c in streamed:
         assert disk_hashes[(c.path, bslice_key(c.slice))] == c.hash
+
+
+# ---------------------------------------------------------------------------
+# compressed wire + digest-dedup frames
+# ---------------------------------------------------------------------------
+
+
+def test_codec_ladder_and_env_gate(monkeypatch):
+    monkeypatch.delenv(wire.COMPRESSION_ENV, raising=False)
+    # default ladder: fast codecs only — zlib is never offered implicitly
+    # (slower than a local socket; it would tax every hop)
+    assert "zlib" not in wire.available_codecs()
+    monkeypatch.setenv(wire.COMPRESSION_ENV, "off")
+    assert wire.available_codecs() == ()
+    monkeypatch.setenv(wire.COMPRESSION_ENV, "zlib")
+    assert wire.available_codecs() == ("zlib",)  # explicit opt-in works
+    monkeypatch.delenv(wire.COMPRESSION_ENV)
+    # negotiation: first of mine both sides speak; None disables cleanly
+    assert wire.negotiate_codec(("zstd", "zlib"), ["zlib"]) == "zlib"
+    assert wire.negotiate_codec(("zlib",), []) is None
+    assert wire.negotiate_codec(("zlib",), None) is None
+    assert wire.negotiate_codec((), ["zlib"]) is None
+
+
+def test_compress_payload_roundtrip_and_corruption():
+    raw = b"abc" * 4096
+    # every codec this build can speak, not just the offered ladder (zlib
+    # is opt-in for negotiation but must always roundtrip)
+    for codec in set(wire.available_codecs()) | {"zlib"}:
+        comp = wire.compress_payload(codec, raw)
+        assert len(comp) < len(raw)
+        assert bytes(wire.decompress_payload(codec, comp)) == raw
+        garbled = bytes([comp[0] ^ 0xFF]) + comp[1:]
+        with pytest.raises(wire.WireError, match="corrupt"):
+            wire.decompress_payload(codec, garbled)
+
+
+def _pump_to_receiver(state, *, codec, dedup, chunk_bytes=4096, arm_spec=None):
+    """Run pump_state_chunks -> receive_state_stream over a socketpair."""
+    from repro.chaos import faults
+    from repro.fabric.stream import pump_state_chunks, receive_state_stream
+
+    a, b = _sock_pair()
+    reader = wire.FrameReader(b)
+    stats = {}
+
+    def send():
+        try:
+            grid, n_chunks, n_data, sent = pump_state_chunks(
+                a, state, chunk_bytes=chunk_bytes, codec=codec, dedup=dedup)
+            stats.update(chunks=n_chunks, data=n_data, sent_bytes=sent)
+        finally:
+            a.close()
+
+    t = threading.Thread(target=send)
+    t.start()
+    try:
+        kwargs = {"meta": state_stream_meta(state), "step": 3}
+        if arm_spec is not None:
+            with faults.arm(arm_spec):
+                return receive_state_stream(reader, kwargs), stats
+        return receive_state_stream(reader, kwargs), stats
+    finally:
+        t.join()
+        b.close()
+
+
+def test_compressed_dedup_stream_roundtrip_bit_identical():
+    """Repeated-content chunks ride as payload-free dup frames and the rest
+    compresses: the wire carries a fraction of the state, bit-identically."""
+    row = np.arange(512, dtype=np.float64)
+    state = {"w": np.tile(row, (32, 1)), "n": 5}  # 32 identical 4 KiB chunks
+    (got, step, grid, counters), stats = _pump_to_receiver(
+        state, codec="zlib", dedup=True)
+    assert step == 3
+    assert got["w"].tobytes() == state["w"].tobytes()
+    assert got["n"] == 5
+    assert counters["chunks"] == stats["chunks"] == len(grid)
+    assert stats["data"] == 1  # one unique digest; 31 dup frames
+    assert stats["sent_bytes"] < state["w"].nbytes / 8  # compressed remainder
+
+
+def test_incompressible_chunks_fall_back_to_raw_frames():
+    import os as _os
+
+    state = {"w": np.frombuffer(_os.urandom(16384), dtype=np.uint8).copy()}
+    (got, _, _, _), stats = _pump_to_receiver(state, codec="zlib", dedup=False)
+    assert got["w"].tobytes() == state["w"].tobytes()
+    # urandom does not shrink: every frame went raw (no "z" inflation)
+    assert stats["sent_bytes"] == state["w"].nbytes
+
+
+def test_garbled_compressed_frame_is_a_wire_error():
+    """Satellite fix: a flipped byte in a compressed payload surfaces as
+    WireError('corrupt ...') — the frame reader's fallback trigger — never
+    a naked zlib/zstd exception."""
+    row = np.arange(512, dtype=np.float64)
+    state = {"w": np.tile(row, (8, 1))}
+    with pytest.raises(wire.WireError, match="corrupt"):
+        _pump_to_receiver(
+            state, codec="zlib", dedup=False,
+            arm_spec={"point": "wire.bulk.decompress", "action": "garble"})
+
+
+def test_dup_frame_without_held_digest_is_rejected():
+    asm = StateAssembler(state_stream_meta({"x": np.arange(8, dtype=np.int64)}))
+    with pytest.raises(StreamStateError, match="digest not held"):
+        asm.put("x", [[0, 8]], dup=True, hash="deadbeef")
