@@ -1,0 +1,225 @@
+"""Serving under churn: tokens/s and TTFT with live migration vs store resume.
+
+Three legs over the same request set (the toy engine: cross-process
+bit-stable, so every leg's transcripts are asserted against the in-process
+oracle before any number is reported):
+
+``single``   one quiet worker, no churn — the baseline the elastic fleet
+             is paying for.
+``migrate``  two workers; mid-run, requests are live-migrated between them
+             (pre-copy: warm stream, decode continues, delta handoff).
+             Decode keeps running between churn events, so the delta here
+             vs ``single`` is the price of *moving requests while serving*.
+``resume``   two workers; one is SIGKILLed mid-generation with NO notice.
+             Its requests resume on the survivor from their last published
+             CMI (publish-on-admit + cadence publishes) — the price of
+             having no notice, which scales with ``--publish-every``
+             (steps since the last publish are re-decoded).
+
+TTFT is per-request admit latency (prefill + first token, over the wire);
+tokens/s is decode throughput wall-clocked from last admit to completion,
+churn included.
+
+The ``--smoke`` contract (CI): every ``migrate``-leg migration must report
+``mode == "stream"`` (a silent store fallback fails the run, mirroring
+bench_hop's no-fallback contract), the ``resume`` leg must record at least
+one store resume, and all transcripts must match the oracle.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve --out BENCH_serve.json
+    PYTHONPATH=src python -m benchmarks.bench_serve --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+ENGINE = "toy:seed=0"  # d=64, vocab=512
+CHUNK_BYTES = 1 << 13  # small chunks so delta handoffs have row granularity
+
+
+def _requests(n: int, gen: int) -> list[dict]:
+    return [
+        {"id": f"r{i:02d}", "prompt": [11 + 7 * i + j for j in range(16)],
+         "max_new": int(gen)}
+        for i in range(n)
+    ]
+
+
+def _pctl(values: list[float], q: float) -> float:
+    ordered = sorted(values)
+    return ordered[min(len(ordered) - 1, int(q * len(ordered)))]
+
+
+def _leg(name: str, *, requests: list[dict], workers: int, publish_every: int,
+         churn=None) -> dict:
+    """Run one fleet leg to completion; returns metrics + router events."""
+    from repro.core.jobstore import JobStore
+    from repro.fabric.supervisor import FabricSupervisor
+    from repro.serve.router import ServeRouter
+    from repro.serve.scenarios import spawn_serve_worker
+
+    tmp = Path(tempfile.mkdtemp(prefix=f"bench-serve-{name}-"))
+    sup = FabricSupervisor(str(tmp / "store"), str(tmp / "jobs"))
+    router = ServeRouter(jobstore=JobStore(tmp / "jobs"))
+    try:
+        for i in range(workers):
+            handle = spawn_serve_worker(
+                sup, f"w{i}", engine_spec=ENGINE,
+                publish_every=publish_every, chunk_bytes=CHUNK_BYTES,
+            )
+            router.add_worker(f"w{i}", handle.address)
+        for req in requests:
+            router.admit(req["prompt"], req["max_new"], req_id=req["id"])
+        t0 = time.perf_counter()
+        rounds = 0
+        while router.pending():
+            router.step()
+            rounds += 1
+            if churn is not None:
+                churn(sup, router, rounds)
+        decode_s = time.perf_counter() - t0
+        transcripts = {req["id"]: router.transcript(req["id"])
+                       for req in requests}
+        tokens = sum(len(t) for t in transcripts.values())
+        ttft = list(router.ttft_s.values())
+        return {
+            "tok_s": tokens / max(decode_s, 1e-9),
+            "decode_s": decode_s,
+            "tokens": tokens,
+            "ttft_p50_ms": _pctl(ttft, 0.50) * 1e3,
+            "ttft_p99_ms": _pctl(ttft, 0.99) * 1e3,
+            "events": [e for e in router.events if e["kind"] != "admit"],
+            "transcripts": transcripts,
+        }
+    finally:
+        router.close()
+        sup.shutdown()
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def bench(*, n_requests: int = 8, gen: int = 32, publish_every: int = 4,
+          strict: bool = False) -> tuple[list, dict]:
+    """Returns (rows for run.py's CSV section, machine-readable results)."""
+    from repro.serve.engine import make_engine, run_reference
+
+    requests = _requests(n_requests, gen)
+    oracle = run_reference(make_engine(ENGINE), requests)
+
+    def migrate_churn(sup, router, rounds):
+        # pre-copy shape: warm early, keep decoding, delta-handoff later
+        if rounds == 2:
+            for req in router.pending()[:2]:
+                dst = "w1" if router.assignment[req] == "w0" else "w0"
+                router.warm(req, dst)
+        if rounds == 6:
+            for req in list(router.pending())[:2]:
+                dst = "w1" if router.assignment[req] == "w0" else "w0"
+                router.migrate(req, dst, warm=False)
+
+    def resume_churn(sup, router, rounds):
+        if rounds == 6 and "w0" in router.workers:
+            sup.reclaim("w0", notice=False)
+            router.recover("w0", "w1")
+
+    legs = {
+        "single": _leg("single", requests=requests, workers=1,
+                       publish_every=publish_every),
+        "migrate": _leg("migrate", requests=requests, workers=2,
+                        publish_every=publish_every, churn=migrate_churn),
+        "resume": _leg("resume", requests=requests, workers=2,
+                       publish_every=publish_every, churn=resume_churn),
+    }
+
+    for name, leg in legs.items():
+        for req in requests:
+            if leg["transcripts"][req["id"]] != oracle[req["id"]]:
+                raise SystemExit(
+                    f"{name}: transcript of {req['id']} diverged from the "
+                    f"oracle — the bench result would be meaningless")
+
+    migrations = [e for e in legs["migrate"]["events"] if e["kind"] == "migrate"]
+    resumes = [e for e in legs["resume"]["events"] if e["kind"] == "resume"]
+    if strict:
+        if not migrations:
+            raise SystemExit("smoke: the migrate leg recorded no migrations")
+        fell_back = [e for e in migrations if e["mode"] != "stream"]
+        if fell_back:
+            raise SystemExit(
+                f"smoke: migrations silently fell back to the store: {fell_back}")
+        if any(e.get("data_chunks", 0) + e.get("ref_chunks", 0) == 0
+               for e in migrations):
+            raise SystemExit("smoke: a stream migration carried no chunks")
+        if not resumes:
+            raise SystemExit("smoke: the resume leg never resumed from the store")
+
+    rows = []
+    for name, leg in legs.items():
+        rows.append((f"{name}.decode_tok", 1e6 / max(leg["tok_s"], 1e-9),
+                     f"{leg['tok_s']:.0f} tok/s over {leg['tokens']} tokens"))
+        rows.append((f"{name}.ttft_p99", leg["ttft_p99_ms"] * 1e3,
+                     f"p50 {leg['ttft_p50_ms']:.1f}ms"))
+
+    results = {
+        "meta": {
+            "engine": ENGINE,
+            "requests": n_requests,
+            "gen": gen,
+            "publish_every": publish_every,
+            "chunk_bytes": CHUNK_BYTES,
+            "transcripts_bit_identical": True,
+        },
+        "legs": {
+            name: {k: v for k, v in leg.items() if k != "transcripts"}
+            for name, leg in legs.items()
+        },
+        "churn": {
+            "migrations": migrations,
+            "resumes": resumes,
+            "migrate_vs_single_tok_s": (
+                legs["migrate"]["tok_s"] / max(legs["single"]["tok_s"], 1e-9)),
+            "resume_vs_single_tok_s": (
+                legs["resume"]["tok_s"] / max(legs["single"]["tok_s"], 1e-9)),
+        },
+    }
+    return rows, results
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(prog="benchmarks.bench_serve", description=__doc__)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--publish-every", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI contract: small run, strict event assertions")
+    ap.add_argument("--out", default="", help="write results JSON here")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.requests, args.gen = min(args.requests, 6), min(args.gen, 16)
+    rows, results = bench(
+        n_requests=args.requests, gen=args.gen,
+        publish_every=args.publish_every, strict=args.smoke,
+    )
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"serve.{name},{us:.1f},{derived}")
+    for name, leg in results["legs"].items():
+        print(f"# {name}: {leg['tok_s']:.0f} tok/s, "
+              f"TTFT p50 {leg['ttft_p50_ms']:.1f}ms p99 {leg['ttft_p99_ms']:.1f}ms")
+    if args.smoke:
+        print(f"smoke ok: {len(results['churn']['migrations'])} stream "
+              f"migrations, {len(results['churn']['resumes'])} store resumes, "
+              f"all transcripts bit-identical")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

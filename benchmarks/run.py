@@ -4,11 +4,13 @@
     PYTHONPATH=src python -m benchmarks.run [--fast] [--lint]
                                             [--hop-out BENCH_hop.json]
                                             [--spot-out BENCH_spot.json]
+                                            [--serve-out BENCH_serve.json]
 
 Sections map to the paper's experiments (DESIGN.md §7):
     bench_ckpt     — Exp 2: C/R overhead + CMI size (full/delta/device-hint/async)
     bench_hop      — Exp 2: hop latency, live/store/xproc/stream/stream-delta
     bench_spot     — §2.2/Q1/Q2: spot-market cost model
+    bench_serve    — elastic serving: tokens/s + TTFT under migration/resume churn
     bench_colocate — Exp 1: VIIRS→CrIS co-location stages + match kernel
     bench_train    — end-to-end smoke train step + publish cadence overhead
     roofline       — §Roofline table from the dry-run artifacts (if present)
@@ -22,7 +24,9 @@ harness refuses to measure it.
 ``--hop-out`` also records the hop section as machine-readable JSON (schema
 mirrors ``BENCH_ckpt.json``, with ``env.notes``) so the transport's perf
 trajectory is comparable across PRs; ``--spot-out`` does the same for the
-spot cadence-policy sweep (goodput per policy per hazard trace).
+spot cadence-policy sweep (goodput per policy per hazard trace), and
+``--serve-out`` for the serving-fleet churn legs (single vs migrate vs
+resume, transcripts asserted bit-identical first).
 """
 
 from __future__ import annotations
@@ -105,6 +109,12 @@ def main() -> None:
         if i >= len(sys.argv) or sys.argv[i].startswith("--"):
             raise SystemExit("--spot-out needs a file path argument")
         spot_out = sys.argv[i]
+    serve_out = None
+    if "--serve-out" in sys.argv:
+        i = sys.argv.index("--serve-out") + 1
+        if i >= len(sys.argv) or sys.argv[i].startswith("--"):
+            raise SystemExit("--serve-out needs a file path argument")
+        serve_out = sys.argv[i]
     print("name,us_per_call,derived")
     from benchmarks import bench_ckpt, bench_colocate, bench_hop, bench_spot
 
@@ -120,6 +130,14 @@ def main() -> None:
     if spot_out:
         with open(spot_out, "w") as f:
             json.dump(spot_results, f, indent=1, sort_keys=True)
+    from benchmarks import bench_serve
+
+    serve_rows, serve_results = bench_serve.bench(
+        n_requests=6 if fast else 8, gen=16 if fast else 32)
+    _section("serve", serve_rows)
+    if serve_out:
+        with open(serve_out, "w") as f:
+            json.dump(serve_results, f, indent=1, sort_keys=True)
     _section("colocate", bench_colocate.run(2 if fast else 4))
     _section("train", bench_train_rows(fast))
     # roofline table (requires dry-run artifacts)

@@ -1,9 +1,15 @@
 """Serving as a preemptible job: the KV caches + position ARE the CMI.
 
-A batched generation job prefills once, decodes a few tokens, is reclaimed,
-and a new instance resumes mid-generation from the published CMI — no
-re-prefill. (With 32k contexts, prefill is exactly the "hours of work" the
-paper refuses to throw away.)
+An elastic fleet serves a batch of generation requests through the router
+(``repro.serve``): requests join a rolling batch on whichever worker is
+least loaded, one is live-migrated mid-generation over the streamed delta
+hop, and then the spot market SIGKILLs a worker with no notice — its
+in-flight requests resume on the survivor from their last published CMI,
+*without re-prefilling* (with 32k contexts, prefill is exactly the "hours
+of work" the paper refuses to throw away).
+
+The reference transcripts come from an unperturbed single worker in the
+same fleet environment, so the final assert is bit-for-bit.
 
     PYTHONPATH=src python examples/elastic_serve.py
 """
@@ -13,65 +19,69 @@ import tempfile
 
 sys.path.insert(0, "src")
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
+from repro.core import JobStore  # noqa: E402
+from repro.fabric.supervisor import FabricSupervisor  # noqa: E402
+from repro.serve import ServeRouter  # noqa: E402
+from repro.serve.scenarios import spawn_serve_worker, spot_reclaim  # noqa: E402
 
-from repro.configs import get_smoke_config  # noqa: E402
-from repro.core import DHP, NBS, JobStore  # noqa: E402
-from repro.core.jobstore import STATUS_CKPT, STATUS_FINISHED  # noqa: E402
-from repro.models import Model  # noqa: E402
-
-cfg = get_smoke_config("qwen3-1.7b")
-model = Model(cfg)
-params, _ = model.init(jax.random.PRNGKey(0))
+ENGINE = "model:qwen3-1.7b:smoke:seed=0"
+REQUESTS = [
+    {"id": f"r{i}", "prompt": [17 + 3 * i + j for j in range(12)], "max_new": 12}
+    for i in range(4)
+]
 
 root = tempfile.mkdtemp(prefix="navp-serve-")
-nbs = NBS(root + "/s3")
-nbs.add_node("serve-0", mesh=None)
-nbs.add_node("serve-1", mesh=None)
-store = JobStore(root + "/jobs")
-job = store.create_job({"kind": "generate", "gen": 12})
+sup = FabricSupervisor(store_root=root + "/store", jobstore_root=root + "/jobs")
+jobstore = JobStore(root + "/jobs")
 
-B, S, GEN = 4, 32, 12
-prompt = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab, jnp.int32)
+try:
+    # --- reference: one unperturbed worker defines the expected transcripts.
+    # Same supervisor, same env — the fleet run below must reproduce these
+    # byte for byte through every migration and kill.
+    ref_handle = spawn_serve_worker(sup, "ref", engine_spec=ENGINE)
+    ref_router = ServeRouter(jobstore=jobstore)
+    ref_router.add_worker("ref", ref_handle.address)
+    for req in REQUESTS:
+        ref_router.admit(req["prompt"], req["max_new"], req_id=req["id"])
+    ref_router.run_to_completion()
+    reference = {req["id"]: ref_router.transcript(req["id"]) for req in REQUESTS}
+    ref_router.close()
+    sup.reclaim("ref", notice=True)
+    print(f"reference worker done: {len(reference)} transcripts recorded")
 
-# --- instance 0: prefill + 5 decode steps, then reclaimed -------------------
-dhp = DHP(nbs, "serve-0", store)
-logits, caches = model.prefill(params, {"tokens": prompt}, s_max=S + GEN)
-tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-generated = [tok]
-for i in range(5):
-    lg, caches = model.decode(params, caches, tok, jnp.asarray(S + i, jnp.int32))
-    tok = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    generated.append(tok)
-dhp.publish(job.job_id, STATUS_CKPT,
-            {"caches": caches, "tok": tok, "done": 6, "generated": jnp.concatenate(generated, 1)},
-            step=6)
-print("instance 0 reclaimed after 6/12 tokens; CMI published")
+    # --- the churn run: two workers, live migration, then a spot kill -------
+    router = ServeRouter(jobstore=jobstore)
+    for name in ("w0", "w1"):
+        handle = spawn_serve_worker(sup, name, engine_spec=ENGINE,
+                                    publish_every=3)
+        router.add_worker(name, handle.address)
+    for req in REQUESTS:
+        router.admit(req["prompt"], req["max_new"], req_id=req["id"])
+    for _ in range(3):
+        router.step()
 
-# --- instance 1: resume mid-generation --------------------------------------
-dhp2 = DHP(nbs, "serve-1", store)
-state, step = dhp2.restart(job.job_id)
-caches, tok = state["caches"], jnp.asarray(state["tok"])
-generated = [jnp.asarray(state["generated"])]
-# gen[j+1] = decode(gen[j], pos=S+j); `done` tokens exist, so continue at j=done-1
-for j in range(int(state["done"]) - 1, GEN - 1):
-    lg, caches = model.decode(params, caches, tok, jnp.asarray(S + j, jnp.int32))
-    tok = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    generated.append(tok)
-out = np.asarray(jnp.concatenate(generated, axis=1))
-dhp2.publish(job.job_id, STATUS_FINISHED, product={"tokens": out})
+    victim = next(r for r in router.pending() if router.assignment[r] == "w0")
+    event = router.migrate(victim, "w1")
+    assert event["mode"] == "stream", event
+    print(f"live-migrated {victim} w0 -> w1 mid-generation: "
+          f"{event['chunks']} chunks ({event['data_chunks']} streamed, "
+          f"{event['ref_chunks']} ref'd), zero re-prefill")
+    for _ in range(2):
+        router.step()
 
-# --- verify against an uninterrupted run ------------------------------------
-logits, caches = model.prefill(params, {"tokens": prompt}, s_max=S + GEN)
-tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-ref = [tok]
-for i in range(GEN - 1):
-    lg, caches = model.decode(params, caches, tok, jnp.asarray(S + i, jnp.int32))
-    tok = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    ref.append(tok)
-ref = np.asarray(jnp.concatenate(ref, axis=1))
-assert np.array_equal(out, ref), "migrated generation diverged!"
-print(f"resumed generation identical to uninterrupted run: {out[0].tolist()}")
-print("jobs:", store.svc_list_jobs())
+    # the spot market takes w0 with NO notice: SIGKILL, no flush. Its
+    # requests resume on w1 from their last published CMI — re-generated
+    # tokens overwrite transcript slots with identical values.
+    out = spot_reclaim(sup, router, "w0", "w1", notice=False)
+    print(f"w0 SIGKILLed (rc={out['rc']}); resumed on w1: {out['resumed']}")
+    router.run_to_completion()
+
+    for req in REQUESTS:
+        got = router.transcript(req["id"])
+        assert got == reference[req["id"]], f"{req['id']} diverged: {got}"
+    print("all transcripts identical to the unperturbed run:")
+    for req in REQUESTS:
+        print(f"  {req['id']}: {reference[req['id']]}")
+    router.close()
+finally:
+    sup.shutdown()

@@ -40,7 +40,18 @@ Two scenarios carry the cells:
     re-resolution — the node must end ALIVE under a bumped generation (or,
     for pure heartbeat gaps, the SAME generation with no respawn at all).
 
-The ``tour`` and ``job`` scenarios run on either transport
+``serve``
+    an elastic serving fleet: two serving workers (``repro.serve.worker``)
+    under a router running continuous batching. Faults strike the serve
+    protocol states — admission, the live-migration stream, the SIGTERM
+    notice path, bulk drain — and recovery is the router's ladder: retry
+    admission on another worker, fall back from the streamed delta handoff
+    to publish + resume through the CAS store, resume a SIGKILLed worker's
+    requests from their last published CMI on a survivor. The invariant is
+    the subsystem's own: every transcript bit-identical to an unperturbed
+    single-engine run.
+
+The ``tour``, ``job``, and ``serve`` scenarios run on either transport
 (``--transport unix|tcp|both``); ``both`` proves every recovery invariant
 on the wire path real fleets use, with respawn-in-place happening at
 pinned TCP ports instead of pinned socket paths.
@@ -172,6 +183,31 @@ CELLS: list[dict] = [
     # corruption -> clean store fallback, never a codec exception
     {"id": "wire.bulk.decompress:garble", "scenario": "tour", "input": "compressible",
      "spec": {"point": "wire.bulk.decompress", "action": "garble", "role": "driver"}},
+    # -- serve (elastic serving fleet) -------------------------------------
+    # admission fails on the least-loaded worker; the router must land the
+    # request on the next one (exactly-one-admit either way). node-scoped:
+    # fault counters are per-process, so an unscoped error would fire once
+    # in EVERY worker and exhaust the candidate list
+    {"id": "serve.admit:error", "scenario": "serve",
+     "spec": {"point": "serve.admit", "action": "error", "role": "worker",
+              "node": "s0"}},
+    # times=2: the warm stream AND the delta handoff both die mid-frame, so
+    # the live path is exhausted and the migration must travel as publish +
+    # resume through the store (the router's event records the fallback)
+    {"id": "serve.migrate.mid_stream:kill_conn", "scenario": "serve", "mode": "migrate",
+     "spec": {"point": "serve.migrate.mid_stream", "action": "kill_conn",
+              "role": "worker", "times": 2}},
+    # the grace window expires mid-notice: SIGTERM lands, and the final
+    # publish-all is cut short by a SIGKILL — the survivors of the admit-time
+    # and cadence publishes are the only durable state to resume from
+    {"id": "serve.reclaim.notice:sigkill", "scenario": "serve", "mode": "reclaim",
+     "spec": {"point": "serve.reclaim.notice", "action": "sigkill",
+              "role": "worker", "node": "s0"}},
+    # bulk drain refuses; the router finishes the drain per-request (each
+    # with its own stream -> store fallback ladder)
+    {"id": "serve.drain:error", "scenario": "serve", "mode": "drain",
+     "spec": {"point": "serve.drain", "action": "error", "role": "worker",
+              "node": "s0"}},
 ]
 
 def cell_registry() -> list[dict]:
@@ -218,6 +254,8 @@ SMOKE_IDS = [
     "registry.resolve:error",
     "agent.respawn:error",
     "cas.publish.pre_link:sigkill",
+    "serve.migrate.mid_stream:kill_conn",
+    "serve.reclaim.notice:sigkill",
 ]
 
 
@@ -425,6 +463,115 @@ def run_job_cell(cell: dict, tmp: Path, transport: str = "unix") -> None:
 
 
 # ---------------------------------------------------------------------------
+# serve scenario (elastic serving fleet: router + 2 serving workers)
+# ---------------------------------------------------------------------------
+
+_SERVE_ENGINE = "toy:d=16,vocab=128,seed=5"
+_SERVE_REQS = [
+    {"id": f"q{i}", "prompt": [3 + 2 * i, 17, 40 + i, 9], "max_new": 10}
+    for i in range(4)
+]
+
+
+def run_serve_cell(cell: dict, tmp: Path, transport: str = "unix") -> None:
+    """Serve protocol faults against a 2-worker continuous-batching fleet.
+
+    The oracle is computed in THIS process (the toy engine is elementwise
+    numpy, bit-stable across processes); every fault cell must end with all
+    four transcripts identical to it, all serve jobs finished with clean
+    CAS stores, and an empty hop namespace. ``mode`` picks the churn the
+    fault strikes: a live migration, a SIGTERM reclaim, or a bulk drain.
+    """
+    from repro.serve.engine import make_engine, run_reference
+    from repro.serve.router import ServeRouter
+    from repro.serve.scenarios import spawn_serve_worker
+
+    expected = run_reference(make_engine(_SERVE_ENGINE), _SERVE_REQS)
+    js = JobStore(tmp / "jobs")
+    sup = FabricSupervisor(str(tmp / "s3"), str(tmp / "jobs"), transport=transport)
+    router = ServeRouter(jobstore=js)
+    try:
+        # workers spawned inside arm() inherit the plan; every serve cell is
+        # role=worker, so the driver (this process) never strikes
+        with faults.arm(cell["spec"]):
+            for name in ("s0", "s1"):
+                handle = spawn_serve_worker(
+                    sup, name, engine_spec=_SERVE_ENGINE,
+                    publish_every=3, chunk_bytes=2048,
+                )
+                router.add_worker(name, handle.address)
+            for req in _SERVE_REQS:  # staggered joins: the rolling batch
+                router.admit(req["prompt"], req["max_new"], req_id=req["id"])
+                router.step()
+            mode = cell.get("mode")
+            if mode == "reclaim":
+                for _ in range(2):
+                    router.step()
+                # notice arrives, and the armed sigkill cuts the notice path
+                # short before publish-all — the 2-minute window "expiring"
+                rc = sup.reclaim("s0", notice=True, wait_s=30)
+                if rc == 0:
+                    raise AssertionError("worker survived the armed notice kill")
+                resumed = router.recover("s0", "s1")
+                if not resumed:
+                    raise AssertionError("no stranded request resumed after kill")
+            elif mode == "drain":
+                moved = router.drain("s0", "s1")
+                drains = [e for e in router.events if e["kind"] == "drain"]
+                if drains[-1]["mode"] != "per-request":
+                    raise AssertionError(
+                        f"bulk drain should have failed over: {drains[-1]}")
+                stayed = [r for r in router.assignment
+                          if router.assignment[r] == "s0"
+                          and r not in router.finished]
+                if stayed:
+                    raise AssertionError(f"drain left requests behind: {stayed}")
+            elif mode == "migrate":
+                victim = next(r for r in sorted(router.pending())
+                              if router.assignment[r] == "s0")
+                event = router.migrate(victim, "s1")
+                if event["mode"] != "store":
+                    raise AssertionError(
+                        f"both stream legs were armed to die; migration should "
+                        f"have fallen back to the store: {event}")
+            else:  # the admit cell: the strike already hit the first admit
+                admitted = {e["req"] for e in router.events if e["kind"] == "admit"}
+                if admitted != {r["id"] for r in _SERVE_REQS}:
+                    raise AssertionError(f"admission did not recover: {admitted}")
+        router.run_to_completion()
+        for req in _SERVE_REQS:
+            got = router.transcript(req["id"])
+            if got != expected[req["id"]]:
+                raise AssertionError(
+                    f"transcript of {req['id']} diverged after recovery: "
+                    f"{got} != {expected[req['id']]}")
+        nbs = NBS(tmp / "s3")
+        leaked = list(nbs.hop_root.iterdir())
+        if leaked:
+            raise AssertionError(f"hop namespace leaked transit CMIs: {leaked}")
+        from repro.checkpoint.fsck import fsck_store
+
+        for req_id, job_id in router.jobs.items():
+            job = js.read_job(job_id)
+            if job.status != STATUS_FINISHED:
+                raise AssertionError(
+                    f"serve job for {req_id} stuck in {job.status!r}")
+            if job.lease_owner is not None:
+                raise AssertionError(f"stranded lease: {job.lease_owner!r}")
+            torn = [p.name for p in js.job_dir(job_id).iterdir()
+                    if ".stage-" in p.name]
+            if torn:
+                raise AssertionError(f"torn CMI staging dirs survived: {torn}")
+            report = fsck_store(js.cmi_root(job_id))
+            if not report.clean:
+                raise AssertionError(
+                    f"store for {req_id} failed fsck: {report.errors}")
+    finally:
+        router.close()
+        sup.shutdown()
+
+
+# ---------------------------------------------------------------------------
 # fleet scenario (registry + agent + agent-spawned worker, TCP-native)
 # ---------------------------------------------------------------------------
 
@@ -518,6 +665,8 @@ def run_cell(cell: dict, transport: str = "unix") -> None:
             run_tour_cell(cell, tmp, transport)
         elif cell["scenario"] == "fleet":
             run_fleet_cell(cell, tmp)  # TCP-native: no transport dimension
+        elif cell["scenario"] == "serve":
+            run_serve_cell(cell, tmp, transport)
         else:
             run_job_cell(cell, tmp, transport)
     finally:

@@ -63,6 +63,11 @@ SITES: dict[str, str] = {
     "cas.gc.mid_sweep": "in the mark-and-sweep GC, before each object unlink",
     # -- wire, continued: compressed bulk payloads -------------------------
     "wire.bulk.decompress": "receiver side, on each compressed bulk payload before decompression",
+    # -- serve (elastic serving fleet: continuous batching + migration) ----
+    "serve.admit": "in the serving worker, on svc/serve_admit before prefill",
+    "serve.migrate.mid_stream": "per bulk frame of a live-migration stream (warm or handoff)",
+    "serve.reclaim.notice": "in the serving worker, on SIGTERM notice before the final publish-all",
+    "serve.drain": "in the serving worker, on svc/serve_drain before the handoffs",
 }
 
 FAMILIES: tuple[str, ...] = tuple(

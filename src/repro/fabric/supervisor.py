@@ -164,6 +164,7 @@ class FabricSupervisor:
         self,
         name: str,
         *,
+        module: str = "repro.fabric.worker",
         job_id: str | None = None,
         claim: bool = False,
         steps: int = 50,
@@ -184,7 +185,9 @@ class FabricSupervisor:
         address is a respawn-in-place, and clients reconnect transparently.
         On tcp without a pin the worker binds an ephemeral port; the real
         address comes back through the ready-file (and the registry, when
-        one is configured)."""
+        one is configured). ``module`` selects the worker entrypoint —
+        ``repro.serve.worker`` provisions a serving worker (same flag
+        surface; ``extra_args`` carries its ``--engine`` spec)."""
         os.makedirs(self.socket_dir, exist_ok=True)
         ready = os.path.join(self.socket_dir, f"{name}-{uuid.uuid4().hex[:6]}.ready")
         if self.transport == "tcp":
@@ -196,7 +199,7 @@ class FabricSupervisor:
             )
             addr_args = ["--socket", bind]
         cmd = [
-            self.python, "-m", "repro.fabric.worker",
+            self.python, "-m", module,
             "--name", name,
             "--store", str(self.store_root),
             *addr_args,

@@ -1,79 +1,172 @@
-"""Batched serving driver: prefill + greedy decode with a published transcript.
+"""Serving CLI: continuous batching over repro.serve, in-process or fabric.
 
-Serving is a job too (the paper's SDS view): the request batch is the input
-dataset, the transcript is the product, and the KV caches + position are the
-CMI — so a serving instance reclaimed mid-generation resumes on a new
-instance without re-prefilling (see examples/elastic_serve.py).
+Thin front-end over the serving subsystem (``repro.serve``): the same
+:class:`~repro.serve.worker.ServeHost` loop answers every mode, so the
+printed transcripts are a pure function of ``(--arch/--seed, --prompt-len,
+--gen, --batch)`` — identical byte for byte whether the batch runs in this
+process (``--workers 0``), on one fabric worker, or spread over N workers
+on either transport. That is the subsystem's bit-identity invariant, and
+this CLI is the quickest way to eyeball it:
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
-        --prompt-len 32 --gen 16 --batch 4
+    PYTHONPATH=src python -m repro.launch.serve --gen 16 --batch 4
+    PYTHONPATH=src python -m repro.launch.serve --workers 2 --transport tcp
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke
+
+Reports per-phase throughput: prefill tok/s (prompt tokens / prefill wall
+time) and decode tok/s (generated tokens past the first / decode wall time),
+plus per-request TTFT when routing over workers.
 """
 
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, get_smoke_config
-from repro.models import Model
 from repro.utils import logger
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
+def build_requests(vocab: int, *, batch: int, prompt_len: int, gen: int,
+                   seed: int) -> list[dict]:
+    """Seed-deterministic request set (the CLI's whole input surface)."""
+    rng = np.random.default_rng(seed)
+    return [
+        {"id": f"r{i:03d}",
+         "prompt": [int(t) for t in rng.integers(0, vocab, prompt_len)],
+         "max_new": int(gen)}
+        for i in range(batch)
+    ]
+
+
+def _engine_spec(args) -> tuple[str, int]:
+    """CLI flags -> (engine spec string, vocab for prompt sampling)."""
+    if args.arch:
+        from repro.configs import get_config, get_smoke_config
+
+        cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+        mode = "smoke" if args.smoke else "full"
+        return f"model:{args.arch}:{mode}:seed={args.seed}", cfg.vocab
+    return f"toy:seed={args.seed}", 512
+
+
+def run_local(spec: str, requests: list[dict]) -> dict:
+    """``--workers 0``: one ServeHost in this process, no fabric at all."""
+    from repro.serve.engine import make_engine
+    from repro.serve.worker import ServeHost
+
+    host = ServeHost(make_engine(spec))
+    transcripts: dict[str, list[int]] = {}
+    prefill_s = 0.0
+    for req in requests:
+        res = host.admit(req["id"], req["prompt"], req["max_new"])
+        prefill_s += res["prefill_s"]
+        transcripts[req["id"]] = [tok for _, tok in res["tokens"]]
+    t1 = time.perf_counter()
+    decoded = 0
+    while host.active:
+        for req_id, toks in host.step()["tokens"].items():
+            transcripts[req_id].extend(tok for _, tok in toks)
+            decoded += len(toks)
+    decode_s = time.perf_counter() - t1
+    return {
+        "mode": "local",
+        "prefill_s": prefill_s,
+        "decode_s": decode_s,
+        "decoded": decoded,
+        "transcripts": transcripts,
+    }
+
+
+def run_routed(spec: str, requests: list[dict], *, workers: int,
+               transport: str, publish_every: int) -> dict:
+    """``--workers N``: real worker processes + the router, either wire."""
+    from repro.core.jobstore import JobStore
+    from repro.fabric.supervisor import FabricSupervisor
+    from repro.serve.router import ServeRouter
+    from repro.serve.scenarios import spawn_serve_worker
+
+    root = tempfile.mkdtemp(prefix="navp-serve-cli-")
+    sup = FabricSupervisor(store_root=root + "/store",
+                           jobstore_root=root + "/jobs", transport=transport)
+    router = ServeRouter(jobstore=JobStore(root + "/jobs"))
+    try:
+        for i in range(workers):
+            handle = spawn_serve_worker(sup, f"s{i}", engine_spec=spec,
+                                        publish_every=publish_every)
+            router.add_worker(f"s{i}", handle.address)
+        t0 = time.perf_counter()
+        for req in requests:
+            router.admit(req["prompt"], req["max_new"], req_id=req["id"])
+        prefill_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        router.run_to_completion()
+        decode_s = time.perf_counter() - t1
+        transcripts = {req["id"]: router.transcript(req["id"])
+                       for req in requests}
+        ttft = sorted(router.ttft_s.values())
+        return {
+            "mode": f"routed:{workers}x{transport}",
+            "prefill_s": prefill_s,
+            "decode_s": decode_s,
+            "decoded": sum(len(t) - 1 for t in transcripts.values()),
+            "transcripts": transcripts,
+            "ttft_p50_s": ttft[len(ttft) // 2],
+            "ttft_max_s": ttft[-1],
+        }
+    finally:
+        router.close()
+        sup.shutdown()
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.serve",
+        description="continuous-batching serving driver over repro.serve")
+    ap.add_argument("--arch", default="",
+                    help="model arch (empty: deterministic toy engine)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke-sized model config (with --arch)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="fabric worker processes (0 = in-process host)")
+    ap.add_argument("--transport", choices=("unix", "tcp"), default="unix")
+    ap.add_argument("--publish-every", type=int, default=8,
+                    help="CMI publish cadence in decode steps (workers mode)")
     args = ap.parse_args(argv)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    model = Model(cfg)
-    params, _ = model.init(jax.random.PRNGKey(args.seed))
-    rng = np.random.default_rng(args.seed)
-    b, s = args.batch, args.prompt_len
-    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
-    batch = {"tokens": prompt}
-    if cfg.vision_prefix:
-        batch["vis_embeds"] = jnp.asarray(
-            rng.standard_normal((b, cfg.vision_prefix, cfg.d_model)) * 0.1, jnp.bfloat16
-        )
-    if cfg.encdec:
-        batch["enc_frames"] = jnp.asarray(
-            rng.standard_normal((b, cfg.enc_seq, cfg.d_model)) * 0.1, jnp.bfloat16
-        )
-    s_total = s + cfg.vision_prefix + args.gen
+    spec, vocab = _engine_spec(args)
+    requests = build_requests(vocab, batch=args.batch,
+                              prompt_len=args.prompt_len, gen=args.gen,
+                              seed=args.seed)
 
-    t0 = time.perf_counter()
-    prefill = jax.jit(lambda p, bb: model.prefill(p, bb, s_total))
-    logits, caches = prefill(params, batch)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
+    if args.workers > 0:
+        metrics = run_routed(spec, requests, workers=args.workers,
+                             transport=args.transport,
+                             publish_every=args.publish_every)
+    else:
+        metrics = run_local(spec, requests)
 
-    decode = jax.jit(lambda p, c, t, pos: model.decode(p, c, t, pos))
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-    out = [tok]
-    t1 = time.perf_counter()
-    for i in range(args.gen - 1):
-        pos = jnp.asarray(s + cfg.vision_prefix + i, jnp.int32)
-        lg, caches = decode(params, caches, tok, pos)
-        tok = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        out.append(tok)
-    jax.block_until_ready(out[-1])
-    t_decode = time.perf_counter() - t1
-    gen = np.asarray(jnp.concatenate(out, axis=1))
+    prompt_toks = args.batch * args.prompt_len
+    decode_toks = metrics["decoded"]
+    metrics["prefill_tok_s"] = prompt_toks / max(metrics["prefill_s"], 1e-9)
+    metrics["decode_tok_s"] = decode_toks / max(metrics["decode_s"], 1e-9)
     logger.info(
-        "prefill %.3fs; decode %d tok × %d seqs in %.3fs (%.1f tok/s)",
-        t_prefill, args.gen, b, t_decode, args.gen * b / max(t_decode, 1e-9),
+        "%s: prefill %d tok in %.3fs (%.1f tok/s); decode %d tok in %.3fs (%.1f tok/s)",
+        metrics["mode"], prompt_toks, metrics["prefill_s"],
+        metrics["prefill_tok_s"], decode_toks, metrics["decode_s"],
+        metrics["decode_tok_s"],
     )
-    print("generated token ids (first seq):", gen[0].tolist())
-    return gen
+    if "ttft_p50_s" in metrics:
+        logger.info("TTFT p50 %.1fms max %.1fms",
+                    metrics["ttft_p50_s"] * 1e3, metrics["ttft_max_s"] * 1e3)
+    for req in requests:
+        print(f"{req['id']}: {metrics['transcripts'][req['id']]}")
+    return metrics
 
 
 if __name__ == "__main__":

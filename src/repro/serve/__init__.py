@@ -1,0 +1,40 @@
+"""Elastic serving on the NavP fabric: continuous batching + live migration.
+
+The serving subsystem treats every in-flight generation request as a small
+navigational program: its KV cache + position is the application-chosen
+checkpoint (the paper's CMI), which makes requests *migratable* — between
+workers over the streamed delta-hop wire mid-generation, and across worker
+deaths via CAS publishes — with bit-identical transcripts as the invariant.
+
+    repro.serve.engine     per-request decode state (toy + jax model engines)
+    repro.serve.worker     ServeHost: the svc/serve_* services + entrypoint
+    repro.serve.router     ServeRouter: admission, stepping, rebalancing
+    repro.serve.scenarios  scale-out / spot-reclaim / drain fleet policies
+
+See docs/serve.md for the protocol and the migration state machine.
+"""
+
+# Exports resolve lazily (PEP 562) so `python -m repro.serve.worker` does not
+# import the worker module twice (once via the package, once via runpy).
+_EXPORTS = {
+    "ModelEngine": "repro.serve.engine",
+    "ToyEngine": "repro.serve.engine",
+    "is_done": "repro.serve.engine",
+    "make_engine": "repro.serve.engine",
+    "run_reference": "repro.serve.engine",
+    "transcript": "repro.serve.engine",
+    "ServeRouter": "repro.serve.router",
+    "WorkerLost": "repro.serve.router",
+    "ServeHost": "repro.serve.worker",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(module), name)

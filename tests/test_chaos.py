@@ -157,12 +157,12 @@ def test_matrix_covers_every_protocol_family():
     # every protocol family is represented in the registry and the matrix
     assert set(FAMILIES) == {"hop", "hop_stream", "relay", "fetch_stream",
                              "publish", "lease", "wire", "proxy",
-                             "registry", "agent", "cas"}
+                             "registry", "agent", "cas", "serve"}
     covered = {family(c["spec"]["point"]) for c in matrix.CELLS}
     assert covered == set(FAMILIES)
     assert {family(p) for p in SITES} == set(FAMILIES)
     smoke = [c for c in matrix.CELLS if c["id"] in matrix.SMOKE_IDS]
-    assert len(smoke) == len(matrix.SMOKE_IDS) <= 11  # CI-sized: ~1/family
+    assert len(smoke) == len(matrix.SMOKE_IDS) <= 13  # CI-sized: ~1/family
 
 
 def test_arm_rejects_unregistered_point():
